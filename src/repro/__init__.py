@@ -1,0 +1,14 @@
+"""repro: iMARS (In-Memory-Computing for Recommendation Systems) on TPU, in JAX.
+
+Pillar A: a faithful reproduction of the iMARS paper — quantized embedding
+tables, LSH + fixed-radius Hamming NNS, hierarchical pooled reduction, the
+two-stage RecSys pipeline (YoutubeDNN / DLRM) and the hardware cost model that
+reproduces the paper's Tables I-III and end-to-end claims.
+
+Pillar B: the paper's technique as a first-class feature of a multi-pod
+training/serving framework: 10 LM architectures, pjit/GSPMD distribution
+(DP/FSDP/TP/SP/EP + pod axis), int8 KV caches, fault-tolerant training,
+dry-run + roofline tooling.
+"""
+
+__version__ = "1.0.0"

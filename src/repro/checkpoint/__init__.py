@@ -1,0 +1,7 @@
+"""Checkpointing: sharded-aware atomic save/restore with elastic resume."""
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,9 @@
+"""Arch configs: 10 assigned architectures + the paper's RecSys models."""
+from repro.configs.base import (  # noqa: F401
+    ArchBundle,
+    ModelConfig,
+    ParallelConfig,
+    SHAPES,
+    ShapeConfig,
+)
+from repro.configs.registry import ARCH_IDS, all_arches, get_arch  # noqa: F401

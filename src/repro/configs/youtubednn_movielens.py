@@ -1,0 +1,9 @@
+"""The paper's own workload: YoutubeDNN on MovieLens (filtering + ranking).
+
+Model/ET dims from Table I; see models/recsys.py and core/mapping.py.
+"""
+from repro.models.recsys import YoutubeDNNConfig, default_youtubednn_config
+
+
+def model_config() -> YoutubeDNNConfig:
+    return default_youtubednn_config()

@@ -1,0 +1,11 @@
+"""iMARS core: the paper's contribution as composable JAX modules.
+
+quantization - int8 ET format (row-wise) + blockwise int8 (optimizer/grads)
+lsh          - SRP signatures packed to uint32 lanes
+nns          - fixed-radius Hamming NNS (TCAM analogue) + cosine refs
+embedding    - quantized embedding-bag engine (CMA RAM mode + adders)
+hierarchy    - two-level sharded reduction (intra-mat / intra-bank adder trees)
+topk         - CTR-buffer threshold top-k
+mapping      - Table I bank/mat/CMA mapping
+cost_model   - Table II FoMs composed into Table III + end-to-end claims
+"""

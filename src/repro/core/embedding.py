@@ -1,0 +1,74 @@
+"""Quantized embedding-table engine — the iMARS ET substrate (Sec. III-A1).
+
+Tables are stored row-wise int8 (`QuantizedTensor`), lookups/pooling go
+through the fused dequant-gather-pool kernel (CMA RAM mode + in-memory
+adders). `MultiTableState` is the software image of the bank structure: one
+named table per sparse feature ("one feature per bank").
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (
+    QuantizedTensor,
+    dequantize_rowwise,
+    quantize_rowwise,
+)
+from repro.kernels import ops
+
+
+def init_table(key: jax.Array, n_rows: int, dim: int, scale: float = 0.05
+               ) -> QuantizedTensor:
+    dense = scale * jax.random.normal(key, (n_rows, dim), dtype=jnp.float32)
+    return quantize_rowwise(dense)
+
+
+def lookup(table: QuantizedTensor, ids: jax.Array) -> jax.Array:
+    """Plain row lookup: ids (...,) -> (..., d) f32. -1 ids give zeros."""
+    valid = (ids >= 0)[..., None]
+    safe = jnp.maximum(ids, 0)
+    rows = table.values[safe].astype(jnp.float32) * table.scales[safe]
+    return jnp.where(valid, rows, 0.0)
+
+
+def embedding_bag(
+    table: QuantizedTensor,
+    ids: jax.Array,  # (B, L) int32, -1 padded
+    weights: jax.Array | None = None,
+    mode: str = "sum",
+) -> jax.Array:
+    """Pooled lookup -> (B, d). mode in {sum, mean}."""
+    pooled = ops.embedding_pool(table.values, table.scales, ids, weights)
+    if mode == "mean":
+        count = jnp.sum((ids >= 0).astype(jnp.float32), axis=-1, keepdims=True)
+        pooled = pooled / jnp.maximum(count, 1.0)
+    return pooled
+
+
+def multi_table_pool(
+    tables: Mapping[str, QuantizedTensor],
+    features: Mapping[str, jax.Array],  # name -> (B, L) ids
+    mode: str = "sum",
+    combine: str = "concat",  # "concat" | "sum"
+) -> jax.Array:
+    """Pool every feature through its table; combine across features.
+
+    combine="sum" requires equal dims (DLRM-style ADD pooling); "concat"
+    is the YoutubeDNN-style feature concatenation.
+    """
+    outs = [embedding_bag(tables[name], features[name], mode=mode)
+            for name in sorted(features.keys())]
+    if combine == "sum":
+        return sum(outs)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def table_from_dense(dense: jax.Array) -> QuantizedTensor:
+    return quantize_rowwise(dense)
+
+
+def table_to_dense(table: QuantizedTensor) -> jax.Array:
+    return dequantize_rowwise(table)

@@ -1,0 +1,58 @@
+"""Locality-sensitive hashing (signed random projections) — iMARS Sec. III-B.
+
+The paper replaces cosine-distance NNS with Hamming-distance NNS over 256-bit
+LSH signatures stored alongside each ItET row (2 CMAs per entry: 256-bit int8
+embedding + 256-bit signature). We implement SRP-LSH: sign(x @ G) with G a
+fixed Gaussian matrix, packed into uint32 lanes (8 words for 256 bits) so the
+Hamming kernel can XOR + popcount whole vector registers.
+
+For unit vectors, E[hamming(h(x), h(y))] = n_bits * angle(x, y) / pi — tested
+as a property in tests/test_properties.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import cdiv
+
+WORD_BITS = 32
+
+
+def make_lsh_projections(key: jax.Array, dim: int, n_bits: int = 256) -> jax.Array:
+    """Gaussian projection matrix (dim, n_bits)."""
+    return jax.random.normal(key, (dim, n_bits), dtype=jnp.float32)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack (..., n_bits) {0,1} -> (..., n_bits/32) uint32. n_bits % 32 == 0."""
+    *lead, n_bits = bits.shape
+    assert n_bits % WORD_BITS == 0, n_bits
+    words = bits.reshape(*lead, n_bits // WORD_BITS, WORD_BITS).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return jnp.sum(words * weights, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of pack_bits -> (..., n_bits) int32 in {0,1}."""
+    *lead, n_words = words.shape
+    assert n_words * WORD_BITS >= n_bits
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*lead, n_words * WORD_BITS)[..., :n_bits].astype(jnp.int32)
+
+
+def lsh_signature(x: jax.Array, projections: jax.Array) -> jax.Array:
+    """SRP signature of x (..., dim) -> packed (..., n_bits/32) uint32."""
+    bits = (x @ projections >= 0.0).astype(jnp.uint32)
+    return pack_bits(bits)
+
+
+def signature_words(n_bits: int) -> int:
+    return cdiv(n_bits, WORD_BITS)
+
+
+def expected_hamming(cos_sim: jax.Array, n_bits: int) -> jax.Array:
+    """E[hamming] for SRP given cosine similarity (the LSH collision bound)."""
+    theta = jnp.arccos(jnp.clip(cos_sim, -1.0, 1.0))
+    return n_bits * theta / jnp.pi

@@ -1,0 +1,104 @@
+"""int8 quantization — the iMARS embedding-table data format (Sec. III-B).
+
+The paper quantizes all embedding tables to int8 (32 dims x 8 bits = one
+256-bit CMA row). We implement:
+
+  * row-wise symmetric int8 (one scale per table row) — the ET format; each
+    quantized row is the software image of one CMA row.
+  * block-wise symmetric int8 over flattened tensors — used for optimizer
+    states and gradient compression (the same idea applied beyond the paper).
+
+Both are pytree-registered containers so they pass transparently through
+jit / shard_map / checkpointing.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, cdiv
+
+INT8_MAX = 127.0
+
+
+@pytree_dataclass
+class QuantizedTensor:
+    """Row-wise symmetric int8 tensor: `values[i, :] * scales[i]` ~ original."""
+
+    values: jax.Array  # (n, d) int8
+    scales: jax.Array  # (n, 1) float32
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+@pytree_dataclass(meta_fields=("orig_shape", "block"))
+class BlockQuantizedTensor:
+    """Block-wise symmetric int8 over the flattened tensor.
+
+    `orig_shape`/`block` are static metadata.
+    """
+
+    values: jax.Array  # (n_blocks, block) int8
+    scales: jax.Array  # (n_blocks, 1) float32
+    orig_shape: tuple = ()
+    block: int = 256
+
+    @property
+    def shape(self):
+        return self.orig_shape
+
+
+def quantize_rowwise(x: jax.Array) -> QuantizedTensor:
+    """Symmetric per-row int8 quantization. x: (..., d) -> rows = leading dims."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return QuantizedTensor(values=q, scales=scale.astype(jnp.float32))
+
+
+def dequantize_rowwise(q: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    return (q.values.astype(jnp.float32) * q.scales).astype(dtype)
+
+
+def quantize_blockwise(x: jax.Array, block: int = 256) -> BlockQuantizedTensor:
+    """Symmetric block-wise int8 over flattened x (padded to block multiple)."""
+    orig_shape = tuple(x.shape)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    n_blocks = cdiv(max(n, 1), block)
+    pad = n_blocks * block - n
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(n_blocks, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / INT8_MAX
+    q = jnp.clip(jnp.round(blocks / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return BlockQuantizedTensor(
+        values=q, scales=scale.astype(jnp.float32), orig_shape=orig_shape, block=block
+    )
+
+
+def dequantize_blockwise(q: BlockQuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    n = math.prod(q.orig_shape) if q.orig_shape else 0
+    flat = (q.values.astype(jnp.float32) * q.scales).reshape(-1)[:n]
+    return flat.reshape(q.orig_shape).astype(dtype)
+
+
+def quantize_symmetric_int8(x: jax.Array, axis=-1):
+    """Return (int8 values, f32 scales broadcastable along `axis`)."""
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def rowwise_quant_error_bound(q: QuantizedTensor) -> jax.Array:
+    """Max abs error of row-wise quantization is scale/2 per element."""
+    return q.scales / 2.0

@@ -1,0 +1,34 @@
+"""CTR-buffer threshold top-k (iMARS Sec. III-C step 2e).
+
+The paper stores (CTR, item index) pairs in a CMA and retrieves the final
+top-k by threshold-match against an all-1s query. Software semantics: select
+items with score >= threshold, return up to k of them, highest first; with
+threshold = -inf this degrades to plain top-k (the paper's functional goal).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopKResult(NamedTuple):
+    scores: jax.Array  # (..., k) f32, -inf padded
+    indices: jax.Array  # (..., k) int32, -1 padded
+    counts: jax.Array  # (...,) int32 — matches above threshold
+
+
+def threshold_topk(scores: jax.Array, threshold: float, k: int) -> TopKResult:
+    mask = scores >= threshold
+    counts = jnp.sum(mask, axis=-1).astype(jnp.int32)
+    masked = jnp.where(mask, scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(masked, k=min(k, scores.shape[-1]))
+    valid = jnp.isfinite(vals)
+    idx = jnp.where(valid, idx, -1)
+    if idx.shape[-1] < k:
+        pad = k - idx.shape[-1]
+        pad_widths = [(0, 0)] * (idx.ndim - 1) + [(0, pad)]
+        idx = jnp.pad(idx, pad_widths, constant_values=-1)
+        vals = jnp.pad(vals, pad_widths, constant_values=-jnp.inf)
+    return TopKResult(scores=vals, indices=idx, counts=counts)

@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic RecSys datasets + LM token streams."""

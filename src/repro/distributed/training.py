@@ -1,0 +1,166 @@
+"""train_step: gradient-accumulation scan + remat + chunked vocab-sharded
+cross-entropy + AdamW (configurable state precision) + optional int8
+gradient compression with error feedback.
+
+The logits for a 405B model at (32, 4096) microbatch would be 34 GB — the
+chunked CE never materializes them: per sequence chunk, logits are computed
+vocab-sharded (P(batch, None, model)), reduced with fp32 logsumexp, and
+dropped. This is the "hierarchical adder tree" shape again: partial
+(per-shard) reductions followed by a small cross-shard combine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.distributed.sharding import constrain
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.optim.compression import compress_decompress, init_error_buffer
+from repro.utils import pytree_dataclass
+
+
+@pytree_dataclass
+class TrainState:
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+    err_buf: Any = None  # int8 grad-compression error feedback (optional)
+
+
+def init_train_state(cfg: ModelConfig, pcfg: ParallelConfig, key) -> TrainState:
+    params = tf.init_params(cfg, key)
+    opt = adamw.init_adamw_state(params, pcfg.opt_state_dtype)
+    err = init_error_buffer(params) if pcfg.grad_compression else None
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32), err_buf=err)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def _ce_from_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL, fp32. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_cross_entropy(params, cfg: ModelConfig, hidden: jax.Array,
+                          labels: jax.Array, chunk: int) -> jax.Array:
+    """hidden (B, S, D), labels (B, S) -> mean NLL without (B, S, V) logits."""
+    B, S, D = hidden.shape
+    if chunk <= 0 or S % chunk != 0 or S == chunk:
+        return _ce_from_logits(tf.unembed(params, cfg, hidden), labels)
+    n = S // chunk
+    h = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)  # (n, B, c, D)
+    l = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    # remat the chunk: otherwise the scan's backward SAVES the per-chunk
+    # logits — i.e. the full (B, S, V) fp32 logits we are avoiding
+    @jax.checkpoint
+    def chunk_nll(hc, lc):
+        logits = tf.unembed(params, cfg, hc)  # (B, c, V) vocab-sharded
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], -1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(acc, xs):
+        hc, lc = xs
+        return acc + chunk_nll(hc, lc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, l))
+    return total / (B * S)
+
+
+def lm_loss(params, cfg: ModelConfig, pcfg: ParallelConfig,
+            batch: dict) -> tuple[jax.Array, dict]:
+    out = tf.forward(params, cfg, batch, mode="train", remat=pcfg.remat,
+                     logits_mode="none")
+    labels = batch["labels"]
+    if cfg.family == "audio":
+        logits = tf.unembed(params, cfg, out.hidden)  # (B, S, K, V)
+        nll = _ce_from_logits(jnp.moveaxis(logits, 2, 1), labels)
+    else:
+        nll = chunked_cross_entropy(params, cfg, out.hidden, labels,
+                                    pcfg.logit_chunk)
+    loss = nll + cfg.router_aux_weight * out.aux_loss
+    return loss, {"nll": nll, "aux": out.aux_loss}
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                    shape: ShapeConfig, *, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    grad_shardings: Any = None
+                    ) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    """Returns train_step(state, batch); batch leaves have a leading
+    gradient-accumulation axis: tokens (accum, mb, ...).
+
+    grad_shardings (§Perf iteration 4): constraining each microbatch's
+    gradients to the FSDP-sharded accumulator spec lets XLA emit
+    reduce-scatters instead of full all-reduces inside the accumulation
+    scan — 16x less gradient traffic on a 16-wide data axis.
+    """
+    lr_fn = adamw.cosine_schedule(base_lr, warmup, total_steps)
+    accum = pcfg.accum_for(shape.name)
+
+    def _constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+
+        def loss_fn(p, mb):
+            return lm_loss(p, cfg, pcfg, mb)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def accum_body(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, _aux), grads = grad_fn(params, mb)
+            grads = _constrain_grads(grads)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (g_acc, loss_acc + loss), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if accum == 1:
+            mb = jax.tree_util.tree_map(lambda x: x[0], batch)
+            (loss, _aux), grads = grad_fn(params, mb)
+            grads = _constrain_grads(grads)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum_body, (g0, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+
+        new_err = state.err_buf
+        if pcfg.grad_compression and state.err_buf is not None:
+            grads, new_err = compress_decompress(grads, state.err_buf)
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, 1.0)
+        lr = lr_fn(state.step)
+        new_params, new_opt = adamw.adamw_update(
+            grads, state.opt, params, lr,
+            state_dtype=pcfg.opt_state_dtype)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1, err_buf=new_err)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step

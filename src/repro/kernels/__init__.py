@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (+ pure-jnp oracles and dispatching wrappers).
+
+Layout (per the kernel contract):
+  <name>.py  - pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     - jit'd wrappers with TPU/interpret/ref dispatch
+  ref.py     - pure-jnp oracles (ground truth for allclose tests)
+"""
+from repro.kernels import ops, ref  # noqa: F401

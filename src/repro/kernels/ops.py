@@ -1,0 +1,88 @@
+"""jit'd public wrappers with backend dispatch for every kernel.
+
+On TPU the Pallas kernels run compiled (interpret=False); on CPU (this
+container) `REPRO_PALLAS=interpret` runs them through the Pallas interpreter
+for correctness, and the default is the pure-jnp reference (fast to compile,
+same numerics) — model code always calls through here and never cares.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.embedding_pool import embedding_pool_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hamming_nns import hamming_distances_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+
+
+def _mode() -> str:
+    """'pallas' | 'interpret' | 'ref'."""
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("pallas", "interpret", "ref"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def embedding_pool(table_values, table_scales, ids, weights=None):
+    """Fused int8 dequant-gather-pool: (n,d) int8 table, (B,L) ids -> (B,d)."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.embedding_pool_ref(table_values, table_scales, ids, weights)
+    d = table_values.shape[1]
+    block_d = d if d <= 512 else 512
+    if d % block_d != 0:
+        block_d = d  # fall back to unblocked when not divisible
+    valid = (ids >= 0).astype(jnp.float32)
+    w = valid if weights is None else weights.astype(jnp.float32) * valid
+    return embedding_pool_pallas(
+        table_values,
+        table_scales,
+        ids,
+        w,
+        block_d=block_d,
+        interpret=(mode == "interpret"),
+    )
+
+
+def hamming_distances(queries, db):
+    """(q,w) x (n,w) packed uint32 signatures -> (q,n) int32 distances."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.hamming_distance_ref(queries, db)
+    n = db.shape[0]
+    block_n = 1024 if n >= 1024 else max(128, 1 << (n - 1).bit_length())
+    return hamming_distances_pallas(
+        queries, db, block_n=block_n, interpret=(mode == "interpret")
+    )
+
+
+def int8_matmul(x, w, x_scale, w_scale):
+    """int8 (m,k) @ int8 (k,n) with per-row/col f32 scales -> f32 (m,n)."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.int8_matmul_ref(x, w, x_scale, w_scale)
+    return int8_matmul_pallas(
+        x, w, x_scale, w_scale, interpret=(mode == "interpret")
+    )
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None):
+    """(b,h,s,d) attention; flash kernel on TPU, blocked ref elsewhere."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.blocked_attention_ref(q, k, v, causal=causal, scale=scale)
+    b, h, sq, d = q.shape
+    out = flash_attention_pallas(
+        q.reshape(b * h, sq, d),
+        k.reshape(b * h, k.shape[2], d),
+        v.reshape(b * h, v.shape[2], d),
+        causal=causal,
+        scale=scale,
+        interpret=(mode == "interpret"),
+    )
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the ground truth for the per-kernel allclose tests and the CPU
+execution path of the framework (kernels/ops.py dispatches here when not on
+TPU). They are written for clarity first, but the blocked attention variant
+is production-grade (online softmax, O(S) memory) because it is the actual
+CPU/compile-time path for 32k prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Embedding pool (iMARS CMA RAM-mode lookup + in-memory adder pooling)
+# ---------------------------------------------------------------------------
+def embedding_pool_ref(
+    table_values: jax.Array,  # (n, d) int8
+    table_scales: jax.Array,  # (n, 1) f32
+    ids: jax.Array,  # (B, L) int32, -1 = padding
+    weights: jax.Array | None = None,  # (B, L) f32
+) -> jax.Array:
+    """Fused int8 dequant-gather-pool -> (B, d) f32."""
+    valid = (ids >= 0).astype(jnp.float32)
+    safe_ids = jnp.maximum(ids, 0)
+    rows = table_values[safe_ids].astype(jnp.float32)  # (B, L, d)
+    scales = table_scales[safe_ids]  # (B, L, 1)
+    w = valid if weights is None else weights * valid
+    return jnp.einsum("bld,bl->bd", rows * scales, w)
+
+
+# ---------------------------------------------------------------------------
+# Hamming distance (iMARS TCAM threshold search)
+# ---------------------------------------------------------------------------
+def hamming_distance_ref(queries: jax.Array, db: jax.Array) -> jax.Array:
+    """queries (q, w) uint32, db (n, w) uint32 -> (q, n) int32 distances."""
+    x = jnp.bitwise_xor(queries[:, None, :], db[None, :, :])
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul (iMARS crossbar MVM analogue)
+# ---------------------------------------------------------------------------
+def int8_matmul_ref(
+    x: jax.Array,  # (m, k) int8
+    w: jax.Array,  # (k, n) int8
+    x_scale: jax.Array,  # (m, 1) f32
+    w_scale: jax.Array,  # (1, n) f32
+) -> jax.Array:
+    acc = jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention_ref(
+    q: jax.Array,  # (b, h, sq, d)
+    k: jax.Array,  # (b, h, sk, d)
+    v: jax.Array,  # (b, h, sk, d)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full-materialization softmax attention (oracle)."""
+    d = q.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        rows = jnp.arange(sq)[:, None] + q_offset
+        cols = jnp.arange(sk)[None, :]
+        s = jnp.where(cols <= rows, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def blocked_attention_ref(
+    q: jax.Array,  # (b, h, sq, d)
+    k: jax.Array,  # (b, h, sk, d)
+    v: jax.Array,  # (b, h, sk, d)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, O(sq * block_k) memory (flash-style, pure jnp).
+
+    This is the production CPU/lowering path for long sequences; it is also
+    the numerical contract the Pallas flash kernel must match.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = (d**-0.5) if scale is None else scale
+    qf = q.astype(jnp.float32) * scale
+
+    n_blocks = -(-sk // block_k)
+    pad = n_blocks * block_k - sk
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kf = kf.reshape(b, h, n_blocks, block_k, d)
+    vf = vf.reshape(b, h, n_blocks, block_k, d)
+
+    rows = jnp.arange(sq)[:, None] + q_offset  # (sq, 1)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc_prev = carry
+        kb, vb, blk_idx = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb)  # (b,h,sq,block_k)
+        cols = blk_idx * block_k + jnp.arange(block_k)[None, :]
+        mask = cols <= rows if causal else (cols < sk)
+        # always mask k-padding
+        mask = jnp.logical_and(mask, cols < sk)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # guard -inf rows (no valid key yet)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf))
+        alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((b, h, sq), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), dtype=jnp.float32)
+    kb = jnp.moveaxis(kf, 2, 0)  # (n_blocks, b, h, block_k, d)
+    vb = jnp.moveaxis(vf, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kb, vb, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (b, h, 1, d)
+    k: jax.Array,  # (b, h, s, d)
+    v: jax.Array,  # (b, h, s, d)
+    length_mask: jax.Array | None = None,  # (b, s) bool — valid cache slots
+    scale: float | None = None,
+) -> jax.Array:
+    d = q.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if length_mask is not None:
+        s = jnp.where(length_mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

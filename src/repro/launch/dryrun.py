@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production mesh (16x16 single pod / 2x16x16 multi-pod) with 512
+placeholder host devices; record memory_analysis, cost_analysis, and
+trip-count-corrected HLO stats (FLOPs / HBM bytes / collective bytes) into
+experiments/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "generated_code_bytes": mem.generated_code_size_in_bytes,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             override_parallel: dict | None = None,
+             hlo_path: pathlib.Path | None = None,
+             override_model: dict | None = None) -> dict:
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_arch
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    t0 = time.time()
+    bundle = get_arch(arch)
+    if override_parallel or override_model:
+        bundle = type(bundle)(
+            model=bundle.model.with_(**(override_model or {})),
+            parallel=bundle.parallel.with_(**(override_parallel or {})),
+            skip_shapes=bundle.skip_shapes,
+        )
+    mesh_name = "multi" if multi_pod else "single"
+    if shape_name in dict(bundle.skip_shapes):
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped", "reason": dict(bundle.skip_shapes)[shape_name],
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.devices.size
+
+    with mesh:
+        built = build_step(bundle, shape_name, mesh)
+        lowered = built.fn.lower(*built.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        if hlo_path is not None:
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(hlo_text)
+        stats = analyze_hlo(hlo_text, total_devices=n_devices)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+        "n_devices": n_devices,
+        "memory": _mem_dict(mem),
+        "xla_cost_analysis": {
+            "flops_single_body": cost.get("flops", 0.0),
+            "bytes_accessed_single_body": cost.get("bytes accessed", 0.0),
+        },
+        "hlo": {
+            "flops": stats.flops,
+            "hbm_bytes": stats.hbm_bytes,
+            "collective_bytes": stats.collective_bytes,
+            "collective_count": stats.collective_count,
+            "per_collective": stats.per_collective,
+        },
+        "timings_s": {"lower": round(t_lower, 2), "compile": round(t_compile, 2)},
+        "kv_repeat": built.cfg.kv_repeat,
+    }
+    return result
+
+
+def cell_path(arch, shape, mesh_name, tag="") -> pathlib.Path:
+    safe = arch.replace(".", "_").replace("/", "_")
+    suffix = f"__{tag}" if tag else ""
+    return OUT_DIR / f"{safe}__{shape}__{mesh_name}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", type=str, default="",
+                    help="variant tag for perf-iteration runs")
+    ap.add_argument("--override", type=str, default=None,
+                    help="JSON dict of ParallelConfig overrides")
+    ap.add_argument("--model-override", type=str, default=None,
+                    help="JSON dict of ModelConfig overrides")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute HLO stats from saved .hlo.gz (no compile)")
+    args = ap.parse_args()
+
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCH_IDS
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    arches = ARCH_IDS if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+    override = json.loads(args.override) if args.override else None
+    override_model = (json.loads(args.model_override)
+                      if args.model_override else None)
+
+    if args.reanalyze:
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        for arch in arches:
+            for shape in shapes:
+                for mp in meshes:
+                    mesh_name = "multi" if mp else "single"
+                    path = cell_path(arch, shape, mesh_name, args.tag)
+                    hlo_path = path.with_suffix(".hlo.gz")
+                    if not (path.exists() and hlo_path.exists()):
+                        continue
+                    res = json.loads(path.read_text())
+                    with gzip.open(hlo_path, "rt") as f:
+                        text = f.read()
+                    stats = analyze_hlo(text, res.get("n_devices", 1))
+                    res["hlo"] = {
+                        "flops": stats.flops,
+                        "hbm_bytes": stats.hbm_bytes,
+                        "collective_bytes": stats.collective_bytes,
+                        "collective_count": stats.collective_count,
+                        "per_collective": stats.per_collective,
+                    }
+                    path.write_text(json.dumps(res, indent=1))
+                    print(f"[reanalyzed] {path.name}")
+        return
+
+    failures = 0
+    for arch in arches:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                path = cell_path(arch, shape, mesh_name, args.tag)
+                if path.exists() and not args.force:
+                    print(f"[skip-cached] {path.name}")
+                    continue
+                print(f"[run] {arch} x {shape} x {mesh_name} ...",
+                      flush=True)
+                try:
+                    res = run_cell(
+                        arch, shape, mp, override,
+                        hlo_path=path.with_suffix(".hlo.gz"),
+                        override_model=override_model)
+                except Exception as e:  # record the failure — it is a bug
+                    failures += 1
+                    res = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                if args.tag:
+                    res["tag"] = args.tag
+                path.write_text(json.dumps(res, indent=1))
+                print(f"  -> {res['status']}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,378 @@
+"""HLO-text analyzer: trip-count-aware FLOPs / HBM bytes / collective bytes.
+
+Why not compiled.cost_analysis()? XLA's HloCostAnalysis visits every while
+body ONCE — a 126-layer scanned transformer would be undercounted 126x (and
+the gradient-accumulation scan by another 8-16x). The compiled HLO annotates
+`backend_config={"known_trip_count":"N"}` on while ops, so we parse the
+module, build the call graph (while body/condition, fusion `calls`,
+reduction `to_apply`), propagate multiplicities from ENTRY, and accumulate:
+
+  * dot FLOPs: 2 * |result| * prod(contracting dims)   (anywhere, any depth)
+  * collective bytes: operand bytes per op kind (all-gather operands are
+    result/groups, reduce-scatter operands are result*groups, all-reduce /
+    all-to-all / collective-permute operands equal result), weighted by the
+    multiplicity of the enclosing computation
+  * HBM bytes: operand+result bytes of materializing top-level ops (fusions,
+    dots, collectives, copies, dynamic slices); fusion *sub*computations are
+    excluded — fused intermediates never touch HBM
+
+Validated against hand-computed counts in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ops whose operands/results cross HBM on a TPU-like pipeline. Plain
+# elementwise / layout ops are EXCLUDED: the XLA:CPU module leaves them
+# unfused at top level, but a TPU compile fuses them into neighbors —
+# counting them models a no-fusion machine and inflated HBM traffic ~50x
+# in early measurements (see EXPERIMENTS.md §Dry-run notes).
+_MATERIALIZING = (
+    "fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+    "dynamic-slice", "gather", "scatter", "concatenate", "pad", "slice",
+    "custom-call", "sort",
+) + COLLECTIVE_OPS
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    symtab: dict  # %name -> type_str
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if (stripped.startswith("ENTRY") or
+                (not line.startswith(" ") and "->" in line and "{" in line)):
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        # tuple types embed /*index=N*/ comments whose '=' breaks matching
+        if "/*" in line:
+            line = re.sub(r"/\*.*?\*/", "", line)
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, type_str, op = mi.group(1), mi.group(2), mi.group(3)
+            cur.instrs.append(Instr(name, type_str, op, line.strip()))
+            cur.symtab[name] = type_str
+    return comps
+
+
+def _operand_names(line: str, op: str) -> list[str]:
+    # take the text inside the first (...) after the op name
+    idx = line.find(op + "(")
+    if idx < 0:
+        return []
+    depth, start = 0, idx + len(op) + 1
+    out, cur_tok = [], []
+    for ch in line[start:]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur_tok).strip())
+            cur_tok = []
+        else:
+            cur_tok.append(ch)
+    if cur_tok:
+        out.append("".join(cur_tok).strip())
+    names = []
+    for tok in out:
+        tok = tok.strip()
+        if tok.startswith("%"):
+            names.append(tok[1:].split(" ")[0].split(")")[0])
+    return names
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+def _param_effective_bytes(comp: Computation) -> dict[int, int]:
+    """For a fusion subcomputation: bytes actually READ per parameter index.
+
+    * parameter consumed ONLY through dynamic-slice -> just the slice bytes
+      (scan-over-layers: stacked (L, ...) weights sliced per iteration —
+      charging the full stack per layer over-counted HBM ~2500x).
+    * parameter consumed ONLY as the destination (operand 0) of
+      dynamic-update-slice -> 0 bytes (aliased in-place buffer; only the
+      update region moves — the scan ys-stacking pattern).
+    """
+    param_name_to_idx: dict[str, int] = {}
+    for ins in comp.instrs:
+        if ins.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.line)
+            if m:
+                param_name_to_idx[ins.name] = int(m.group(1))
+    eff: dict[int, int] = {}
+    uses: dict[str, list[tuple[Instr, int]]] = {n: [] for n in param_name_to_idx}
+    for ins in comp.instrs:
+        if ins.op == "parameter":
+            continue
+        for pos, oname in enumerate(_operand_names(ins.line, ins.op)):
+            if oname in uses:
+                uses[oname].append((ins, pos))
+    for pname, idx in param_name_to_idx.items():
+        full = _shape_bytes(comp.symtab.get(pname, ""))
+        us = uses.get(pname, [])
+        if us and all(u.op == "dynamic-slice" for u, _ in us):
+            eff[idx] = sum(_shape_bytes(u.type_str) for u, _ in us)
+        elif us and all(u.op == "dynamic-update-slice" and pos == 0
+                        for u, pos in us):
+            eff[idx] = 0
+        else:
+            eff[idx] = full
+    return eff
+
+
+def _fusion_effective_result(comp: Computation, res: int) -> int:
+    """Result bytes actually WRITTEN by a fusion: if the body performs
+    dynamic-update-slices, only the update regions are written (the output
+    aliases the destination buffer)."""
+    dus_updates = 0
+    has_dus = False
+    for ins in comp.instrs:
+        if ins.op == "dynamic-update-slice":
+            has_dus = True
+            ops = _operand_names(ins.line, ins.op)
+            if len(ops) >= 2:
+                dus_updates += _shape_bytes(comp.symtab.get(ops[1], ""))
+    if has_dus:
+        return min(res, max(dus_updates, 0))
+    return res
+
+
+_HEAVY_FUSION_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "gather", "scatter",
+    "sort", "dynamic-update-slice", "concatenate", "pad",
+}
+
+
+def _fusion_is_elementwise(comp: Computation) -> bool:
+    """True if the fusion body has no op that forces materialized reads —
+    a TPU compile fuses such chains into their consumers entirely; we charge
+    only the result write (the consumer charges the read)."""
+    for ins in comp.instrs:
+        if ins.op in _HEAVY_FUSION_OPS:
+            return False
+    return True
+
+
+def _multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
+    """Times each computation executes, propagated from ENTRY."""
+    entry = comps.get("__entry__")
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        return mult
+
+    fusion_subs: set[str] = set()
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] += m
+        for ins in comp.instrs:
+            callees = _CALL_ATTR_RE.findall(ins.line)
+            if not callees:
+                continue
+            trip = 1
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+            for cname in set(callees):
+                callee = comps.get(cname)
+                if callee is None:
+                    continue
+                if ins.op == "fusion":
+                    fusion_subs.add(cname)
+                visit(callee, m * (trip if ins.op == "while" else 1))
+
+    visit(entry, 1.0)
+    mult["__fusion_subs__"] = 0.0
+    _multiplicities.fusion_subs = fusion_subs  # type: ignore[attr-defined]
+    return mult
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float  # operand bytes, summed over ops x multiplicity
+    per_collective: dict  # op kind -> bytes
+    collective_count: int
+    uncorrected_flops: float = 0.0
+
+
+def analyze_hlo(text: str, total_devices: int = 1) -> HLOStats:
+    comps = parse_hlo(text)
+    mult = _multiplicities(comps)
+    fusion_subs: set = getattr(_multiplicities, "fusion_subs", set())
+
+    flops = 0.0
+    hbm = 0.0
+    coll = 0.0
+    coll_count = 0
+    per_coll: dict[str, float] = defaultdict(float)
+    eff_cache: dict[str, dict[int, int]] = {}
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_subs
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                out_elems = 1
+                _, dims = _shape_dims(ins.type_str)
+                for d in dims:
+                    out_elems *= d
+                kdim = 1
+                ops = _operand_names(ins.line, ins.op)
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+                if ops and cm and cm.group(1):
+                    lhs_type = comp.symtab.get(ops[0], "")
+                    _, ldims = _shape_dims(lhs_type)
+                    for ci in cm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(ldims):
+                            kdim *= ldims[ci]
+                flops += m * 2.0 * out_elems * kdim
+            if in_fusion:
+                continue  # fused intermediates don't touch HBM
+            if ins.op in COLLECTIVE_OPS:
+                res_bytes = _shape_bytes(ins.type_str)
+                g = _group_size(ins.line, total_devices)
+                if ins.op == "all-gather":
+                    operand = res_bytes / max(g, 1)
+                elif ins.op == "reduce-scatter":
+                    operand = res_bytes * g
+                else:
+                    operand = res_bytes
+                coll += m * operand
+                per_coll[ins.op] += m * operand
+                coll_count += int(m)
+            if ins.op in _MATERIALIZING:
+                res = _shape_bytes(ins.type_str)
+                operands = _operand_names(ins.line, ins.op)
+                if ins.op == "fusion":
+                    cm_ = _CALL_ATTR_RE.search(ins.line)
+                    callee = cm_.group(1) if cm_ else None
+                    if callee and callee in comps:
+                        if _fusion_is_elementwise(comps[callee]):
+                            # XLA:CPU wraps single elementwise ops in one-op
+                            # fusions; a TPU compile fuses these chains away
+                            # entirely — charge only the boundary write
+                            opsum = 0
+                        else:
+                            if callee not in eff_cache:
+                                eff_cache[callee] = _param_effective_bytes(
+                                    comps[callee])
+                            eff = eff_cache[callee]
+                            opsum = sum(
+                                min(eff.get(i, 1 << 62),
+                                    _shape_bytes(comp.symtab.get(o, "")))
+                                for i, o in enumerate(operands))
+                            res = _fusion_effective_result(
+                                comps[callee], res)
+                    else:
+                        opsum = sum(_shape_bytes(comp.symtab.get(o, ""))
+                                    for o in operands)
+                elif ins.op == "dynamic-slice":
+                    opsum = res  # reads only the slice
+                elif ins.op == "dynamic-update-slice" and len(operands) >= 2:
+                    # in-place: reads + writes only the update region
+                    upd = _shape_bytes(comp.symtab.get(operands[1], ""))
+                    res = upd
+                    opsum = upd
+                else:
+                    opsum = sum(_shape_bytes(comp.symtab.get(o, ""))
+                                for o in operands)
+                hbm += m * (res + opsum)
+
+    return HLOStats(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=coll,
+        per_collective=dict(per_coll),
+        collective_count=coll_count,
+    )

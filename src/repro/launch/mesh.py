@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis carries
+pure data parallelism (+ the cross-pod level of every hierarchical
+reduction — the RSC-bus level of the iMARS hierarchy).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (required: the dry-run sets XLA_FLAGS before any jax init; tests and
+benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI-scale sharding tests (8 fake devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def data_axes_of(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,64 @@
+"""Serving driver: batched greedy generation through prefill + decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.reduced import reduce_config
+from repro.configs.registry import get_arch
+from repro.models import transformer as tf
+from repro.serving.engine import LMServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    bundle = get_arch(args.arch)
+    cfg = reduce_config(bundle.model) if args.reduced else bundle.model
+    params = tf.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    if cfg.family == "audio":
+        toks = rng.integers(0, cfg.vocab_size,
+                            (args.batch, cfg.n_codebooks, args.prompt_len))
+    else:
+        toks = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+    if cfg.family == "vlm":
+        nv = cfg.vision_tokens
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(args.batch, nv, cfg.d_model)), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype))
+        batch["vision_pos"] = jnp.asarray(
+            np.stack([rng.choice(args.prompt_len, size=nv, replace=False)
+                      for _ in range(args.batch)]), jnp.int32)
+
+    engine = LMServingEngine(
+        params, cfg, batch=args.batch,
+        cache_len=args.prompt_len + args.gen + 4,
+        cache_dtype=bundle.parallel.kv_cache_dtype
+        if not args.reduced else "bfloat16")
+    t0 = time.time()
+    out = engine.generate(batch, args.gen)
+    dt = time.time() - t0
+    tok_s = args.batch * args.gen / dt
+    print(f"[serve] {cfg.name}: generated {out.tokens.shape} tokens in "
+          f"{dt:.2f}s ({tok_s:.1f} tok/s on this host)")
+    print(out.tokens[0])
+
+
+if __name__ == "__main__":
+    main()

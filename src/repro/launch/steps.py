@@ -1,0 +1,383 @@
+"""Step builders for the dry-run and the drivers: per (arch x shape x mesh),
+construct the jitted step function + abstract inputs (ShapeDtypeStruct — no
+allocation) + in/out shardings.
+
+This is where the mesh meets the model: kv_repeat is derived from the model
+axis, ShardingRules are instantiated per shape kind, and every input gets
+its PartitionSpec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig, \
+    SHAPES, ShapeConfig
+from repro.distributed import training as tr
+from repro.distributed.sharding import (
+    ShardingRules,
+    param_partition_specs,
+    use_rules,
+)
+from repro.launch.mesh import data_axes_of
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWState, QuantState
+from repro.serving import engine as serve_engine
+from repro.serving.kv_cache import init_cache
+
+
+# ---------------------------------------------------------------------------
+# mesh adaptation
+# ---------------------------------------------------------------------------
+def adapt_model_to_mesh(cfg: ModelConfig, mesh) -> ModelConfig:
+    """Set kv_repeat so rep_kv_heads shards exactly over the model axis
+    (only when the resulting grouping still divides n_heads)."""
+    model_size = mesh.shape["model"]
+    if (cfg.n_kv_heads and cfg.n_kv_heads < model_size
+            and model_size % cfg.n_kv_heads == 0):
+        r = model_size // cfg.n_kv_heads
+        if cfg.n_heads % (cfg.n_kv_heads * r) == 0:
+            return cfg.with_(kv_repeat=r)
+    return cfg
+
+
+def heads_shardable(cfg: ModelConfig, mesh) -> bool:
+    if not cfg.n_heads:
+        return True
+    return cfg.rep_kv_heads % mesh.shape["model"] == 0
+
+
+def make_rules(pcfg: ParallelConfig, mesh, shape: ShapeConfig,
+               kind: str, shard_heads: bool = True) -> ShardingRules:
+    data_axes = data_axes_of(mesh)
+    long_ctx = shape.kind == "decode" and shape.global_batch < _data_size(mesh)
+    if kind == "train":
+        return ShardingRules(
+            data_axes=data_axes, fsdp=pcfg.fsdp, seq_shard=pcfg.seq_shard,
+            shard_heads=shard_heads, moe_ff_fsdp=pcfg.moe_shard_ff)
+    # serving; unshardable heads -> parallelize prefill over the sequence
+    return ShardingRules(
+        data_axes=data_axes,
+        fsdp=(pcfg.serve_weight_sharding == "2d"),
+        seq_shard=(not shard_heads) and shape.kind == "prefill",
+        kv_seq_data=long_ctx,
+        batch_data=not long_ctx,
+        shard_heads=shard_heads,
+        moe_ff_fsdp=pcfg.moe_shard_ff,
+    )
+
+
+def _data_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+def _as_sharding(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(params, opt: AdamWState, rules: ShardingRules):
+    pspecs = param_partition_specs(params, rules)
+    flat_specs, treedef = jax.tree_util.tree_flatten(pspecs)
+
+    def moment_specs(moment):
+        leaves = treedef.flatten_up_to(moment)
+        out = []
+        for spec, leaf in zip(flat_specs, leaves):
+            if isinstance(leaf, QuantState):
+                out.append(QuantState(
+                    values=spec, scales=P(*(tuple(spec)[:-1] + (None,)))))
+            else:
+                out.append(spec)
+        return treedef.unflatten(out)
+
+    return AdamWState(
+        mu=moment_specs(opt.mu), nu=moment_specs(opt.nu), count=P())
+
+
+def train_state_specs(state: tr.TrainState, rules: ShardingRules):
+    pspecs = param_partition_specs(state.params, rules)
+    err = None
+    if state.err_buf is not None:
+        err = pspecs
+    return tr.TrainState(
+        params=pspecs,
+        opt=opt_state_specs(state.params, state.opt, rules),
+        step=P(),
+        err_buf=err,
+    )
+
+
+def cache_partition_specs(cfg: ModelConfig, rules: ShardingRules):
+    """Specs matching serving.kv_cache.init_cache's pytree."""
+    batch_ax = rules.data_axes if rules.batch_data else None
+    seq_ax = rules.data_axes if rules.kv_seq_data else None
+    if seq_ax is None and not rules.shard_heads:
+        # unshardable heads: flash-decode layout (cache seq over model)
+        seq_ax = rules.model_axis
+    kv = lambda: _kv_specs(batch_ax, seq_ax, rules.model_axis,
+                           rules.shard_heads)
+    if cfg.family in ("dense", "vlm", "audio"):
+        return kv()
+    if cfg.family == "moe":
+        if cfg.moe_layer_step == 1:
+            return kv()
+        return {"dense": kv(), "moe": kv()}
+    ssm_specs = (
+        P(None, batch_ax, None, rules.model_axis),  # conv (L,B,K-1,cd)
+        P(None, batch_ax, rules.model_axis, None, None),  # ssm (L,B,H,P,N)
+    )
+    if cfg.family == "ssm":
+        return ssm_specs
+    if cfg.family == "hybrid":
+        rem = cfg.n_layers % cfg.attn_every
+        g_ssm = (
+            P(None, None, batch_ax, None, rules.model_axis),
+            P(None, None, batch_ax, rules.model_axis, None, None),
+        )
+        rem_state = None
+        if rem:
+            rem_attn = _kv_specs(batch_ax, seq_ax, rules.model_axis,
+                                 rules.shard_heads, stacked=False)
+            rem_state = (rem_attn, ssm_specs)
+        return (kv(), g_ssm, rem_state)
+    raise ValueError(cfg.family)
+
+
+def _kv_specs(batch_ax, seq_ax, model_axis, shard_heads=True, stacked=True):
+    from repro.models.attention import KVCacheView
+
+    lead = (None,) if stacked else ()
+    head_ax = model_axis if shard_heads else None
+    arr = P(*lead, batch_ax, head_ax, seq_ax, None)
+    return KVCacheView(k=arr, v=arr, k_scale=arr, v_scale=arr)
+
+
+def _prune(specs, cache):
+    """Align spec tree with the cache pytree (bf16 caches drop the scale
+    leaves; KVCacheView None children vanish from the treedef)."""
+    flat_c_paths = jax.tree_util.tree_flatten_with_path(cache)[0]
+    treedef = jax.tree_util.tree_structure(cache)
+    spec_leaves = []
+    for path, _leaf in flat_c_paths:
+        node = specs
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                node = node[p.key]
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                node = node[p.idx]
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                node = getattr(node, p.name)
+            else:
+                node = node[p.idx]
+        spec_leaves.append(node)
+    return treedef.unflatten(spec_leaves)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+def train_batch_abstract(cfg: ModelConfig, pcfg: ParallelConfig,
+                         shape: ShapeConfig, mesh):
+    accum = pcfg.accum_for(shape.name)
+    gb, S = shape.global_batch, shape.seq_len
+    assert gb % accum == 0
+    mb = gb // accum
+    dsz = _data_size(mesh)
+    assert mb % dsz == 0, (
+        f"{cfg.name}: microbatch {mb} not divisible by data size {dsz}")
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        tok_shape = (accum, mb, cfg.n_codebooks, S)
+        spec = P(None, data_axes_of(mesh), None, None)
+    else:
+        tok_shape = (accum, mb, S)
+        spec = P(None, data_axes_of(mesh), None)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+        "labels": jax.ShapeDtypeStruct(tok_shape, i32),
+    }
+    specs = {"tokens": spec, "labels": spec}
+    if cfg.family == "vlm":
+        nv = cfg.vision_tokens
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (accum, mb, nv, cfg.d_model), jnp.bfloat16)
+        batch["vision_pos"] = jax.ShapeDtypeStruct((accum, mb, nv), i32)
+        specs["vision_embeds"] = P(None, data_axes_of(mesh), None, None)
+        specs["vision_pos"] = P(None, data_axes_of(mesh), None)
+        # M-RoPE positions provided by the frontend stub; accum axis
+        # leads so the gradient-accumulation scan slices it
+        batch["positions"] = jax.ShapeDtypeStruct((accum, 3, mb, S), i32)
+        specs["positions"] = P(None, None, data_axes_of(mesh), None)
+    return batch, specs
+
+
+def serve_batch_abstract(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         rules: ShardingRules, kind: str):
+    B = shape.global_batch
+    S = shape.seq_len if kind == "prefill" else 1
+    batch_ax = rules.data_axes if rules.batch_data else None
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks, S), i32)
+        spec = P(batch_ax, None, None)
+    else:
+        tok = jax.ShapeDtypeStruct((B, S), i32)
+        spec = P(batch_ax, None)
+    batch = {"tokens": tok}
+    specs = {"tokens": spec}
+    if cfg.family == "vlm" and kind == "prefill":
+        nv = cfg.vision_tokens
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, nv, cfg.d_model), jnp.bfloat16)
+        batch["vision_pos"] = jax.ShapeDtypeStruct((B, nv), i32)
+        specs["vision_embeds"] = P(batch_ax, None, None)
+        specs["vision_pos"] = P(batch_ax, None)
+    if cfg.family == "vlm":
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        specs["positions"] = P(None, batch_ax, None)
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# builders — each returns (jitted_fn, abstract_args, debug_info)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any  # jitted
+    abstract_args: tuple
+    rules: ShardingRules
+    cfg: ModelConfig
+    note: str = ""
+
+
+def build_train_step(bundle: ArchBundle, shape: ShapeConfig, mesh) -> BuiltStep:
+    cfg = adapt_model_to_mesh(bundle.model, mesh)
+    pcfg = bundle.parallel
+    rules = make_rules(pcfg, mesh, shape, "train",
+                       shard_heads=heads_shardable(cfg, mesh))
+
+    with use_rules(rules):
+        state_abs = jax.eval_shape(
+            lambda: tr.init_train_state(cfg, pcfg, jax.random.key(0)))
+        batch_abs, batch_specs = train_batch_abstract(cfg, pcfg, shape, mesh)
+        state_specs = train_state_specs(state_abs, rules)
+        grad_shardings = _as_sharding(
+            mesh, param_partition_specs(state_abs.params, rules))
+        step_fn = tr.make_train_step(cfg, pcfg, shape,
+                                     grad_shardings=grad_shardings)
+
+        def wrapped(state, batch):
+            with use_rules(rules):
+                return step_fn(state, batch)
+
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(_as_sharding(mesh, state_specs),
+                          _as_sharding(mesh, batch_specs)),
+            out_shardings=(_as_sharding(mesh, state_specs), None),
+            donate_argnums=(0,),
+        )
+    return BuiltStep(fn=jitted, abstract_args=(state_abs, batch_abs),
+                     rules=rules, cfg=cfg)
+
+
+def _params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(lambda: tf.init_params(cfg, jax.random.key(0)))
+
+
+def build_prefill_step(bundle: ArchBundle, shape: ShapeConfig, mesh
+                       ) -> BuiltStep:
+    cfg = adapt_model_to_mesh(bundle.model, mesh)
+    pcfg = bundle.parallel
+    rules = make_rules(pcfg, mesh, shape, "serve",
+                       shard_heads=heads_shardable(cfg, mesh))
+    cache_dtype = pcfg.kv_cache_dtype
+
+    with use_rules(rules):
+        params_abs = _params_abstract(cfg)
+        pspecs = param_partition_specs(params_abs, rules)
+        batch_abs, batch_specs = serve_batch_abstract(
+            cfg, shape, mesh, rules, "prefill")
+
+        def fn(params, batch):
+            with use_rules(rules):
+                out = serve_engine.prefill(
+                    params, cfg, batch, cache_len=shape.seq_len,
+                    cache_dtype=cache_dtype, remat=pcfg.remat)
+                return out.logits, out.caches
+
+        cache_abs = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                               cache_dtype))
+        cache_specs = _prune(cache_partition_specs(cfg, rules), cache_abs)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_as_sharding(mesh, pspecs),
+                          _as_sharding(mesh, batch_specs)),
+            out_shardings=(None, _as_sharding(mesh, cache_specs)),
+        )
+    return BuiltStep(fn=jitted, abstract_args=(params_abs, batch_abs),
+                     rules=rules, cfg=cfg)
+
+
+def build_decode_step(bundle: ArchBundle, shape: ShapeConfig, mesh
+                      ) -> BuiltStep:
+    cfg = adapt_model_to_mesh(bundle.model, mesh)
+    pcfg = bundle.parallel
+    rules = make_rules(pcfg, mesh, shape, "serve",
+                       shard_heads=heads_shardable(cfg, mesh))
+    cache_dtype = pcfg.kv_cache_dtype
+
+    with use_rules(rules):
+        params_abs = _params_abstract(cfg)
+        pspecs = param_partition_specs(params_abs, rules)
+        batch_abs, batch_specs = serve_batch_abstract(
+            cfg, shape, mesh, rules, "decode")
+        cache_abs = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                               cache_dtype))
+        cache_specs = _prune(cache_partition_specs(cfg, rules), cache_abs)
+        idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def fn(params, batch, caches, idx):
+            with use_rules(rules):
+                out = serve_engine.decode_step(params, cfg, batch, caches, idx)
+                return out.logits, out.caches
+
+        jitted = jax.jit(
+            fn,
+            in_shardings=(
+                _as_sharding(mesh, pspecs),
+                _as_sharding(mesh, batch_specs),
+                _as_sharding(mesh, cache_specs),
+                NamedSharding(mesh, P()),
+            ),
+            out_shardings=(None, _as_sharding(mesh, cache_specs)),
+            donate_argnums=(2,),
+        )
+    return BuiltStep(
+        fn=jitted,
+        abstract_args=(params_abs, batch_abs, cache_abs, idx_abs),
+        rules=rules, cfg=cfg)
+
+
+def build_step(bundle: ArchBundle, shape_name: str, mesh) -> BuiltStep:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(bundle, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(bundle, shape, mesh)
+    return build_decode_step(bundle, shape, mesh)

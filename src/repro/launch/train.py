@@ -1,0 +1,94 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduced \
+      --steps 50 --ckpt /tmp/ck
+
+On this CPU container run with --reduced (tiny config, 1 device). On a real
+TPU pod the same driver runs the full config on the production mesh
+(jax.distributed.initialize + make_production_mesh) — the code path is
+identical; only mesh construction and config reduction differ.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.reduced import reduce_config
+from repro.configs.registry import get_arch
+from repro.data.lm_data import PrefetchIterator, synthetic_token_stream
+from repro.distributed import training as tr
+from repro.distributed.fault_tolerance import FaultPolicy, TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", type=str, default="/tmp/repro_train_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    bundle = get_arch(args.arch)
+    cfg = reduce_config(bundle.model) if args.reduced else bundle.model
+    pcfg = bundle.parallel.with_(
+        grad_accum={"cli": 2}, logit_chunk=min(64, args.seq),
+        opt_state_dtype="float32", fsdp=False, seq_shard=False)
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+
+    step_fn = jax.jit(
+        tr.make_train_step(cfg, pcfg, shape, base_lr=3e-4, warmup=20,
+                           total_steps=args.steps),
+        donate_argnums=0)
+
+    accum, mb = 2, args.batch // 2
+
+    def batches():
+        stream = synthetic_token_stream(
+            cfg.vocab_size, args.seq, args.batch, seed=0,
+            n_codebooks=cfg.n_codebooks if cfg.family == "audio" else 0)
+        for item in stream:
+            tok = item["tokens"]
+            lab = item["labels"]
+            if cfg.family == "audio":
+                tok = tok.reshape(accum, mb, cfg.n_codebooks, args.seq)
+                lab = lab.reshape(accum, mb, cfg.n_codebooks, args.seq)
+            else:
+                tok = tok.reshape(accum, mb, args.seq)
+                lab = lab.reshape(accum, mb, args.seq)
+            batch = {"tokens": jnp.asarray(tok), "labels": jnp.asarray(lab)}
+            if cfg.family == "vlm":
+                nv = cfg.vision_tokens
+                rng = np.random.default_rng(int(item["step"]))
+                batch["vision_embeds"] = jnp.asarray(
+                    rng.normal(size=(accum, mb, nv, cfg.d_model)),
+                    jnp.float32).astype(jnp.dtype(cfg.dtype))
+                batch["vision_pos"] = jnp.asarray(
+                    np.stack([rng.choice(args.seq, size=(mb, nv),
+                                         replace=False)
+                              for _ in range(accum)]), jnp.int32)
+            yield batch
+
+    data = PrefetchIterator(batches(), depth=2)
+    loop = TrainLoop(step_fn, Checkpointer(args.ckpt, keep=2, async_=True),
+                     FaultPolicy(checkpoint_every=args.checkpoint_every))
+    state, start = loop.resume_or_init(
+        lambda: tr.init_train_state(cfg, pcfg, jax.random.key(0)))
+    print(f"[train] {cfg.name} reduced={args.reduced} start={start}")
+    state, end = loop.run(state, data, args.steps, start_step=start)
+    losses = [r.metrics["loss"] for r in loop.records]
+    if losses:
+        print(f"[train] done: steps {start}->{end}, loss "
+              f"{losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model definitions: config-driven LM family + the paper's RecSys models."""

@@ -1,0 +1,335 @@
+"""Attention: GQA with mesh-driven KV repetition, qk-norm, RoPE variants,
+blocked (flash-style) training/prefill path and cached decode path.
+
+GQA sharding contract (DESIGN.md): kv heads are repeated by cfg.kv_repeat so
+the repeated-head axis (rep_kv = n_kv * kv_repeat) divides the model axis;
+q is viewed as (B, S, rep_kv, q_per_rep, hd). Every attention einsum then
+carries the rep_kv axis through unchanged — under pjit both operands shard
+head-aligned and no collective is needed until the output projection.
+
+KV caches may be int8 (row-wise scales over hd) — the paper's ET
+quantization applied to the per-session "table" that a KV cache is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models.layers import (
+    apply_rope,
+    init_linear,
+    init_rms_norm,
+    linear,
+    param_dtype,
+    rms_norm,
+    rope_angles,
+)
+
+
+class KVCacheView(NamedTuple):
+    """One layer's cache. k/v: (B, rep_kv, S_max, hd) in cache dtype;
+    scales present iff int8 (shape (B, rep_kv, S_max, 1) f32)."""
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array | None
+    v_scale: jax.Array | None
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    dt = param_dtype(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, dt, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dt)
+        p["k_norm"] = init_rms_norm(hd, dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    ang = rope_angles(cfg, positions)
+    q = apply_rope(q, ang, cfg.rope_fraction)
+    k = apply_rope(k, ang, cfg.rope_fraction)
+    # mesh-driven kv repetition (see module docstring)
+    if cfg.kv_repeat > 1:
+        if cfg.opt_kv_layout:
+            # §Perf: place the SP boundary before the repeat — a targeted
+            # all-gather over seq, instead of GSPMD's "involuntary full
+            # rematerialization" when resharding seq->heads through the
+            # repeat's concatenate
+            k = constrain(k, ("act_batch", None, None, None))
+            v = constrain(v, ("act_batch", None, None, None))
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    # heads over model (seq deliberately unsharded here: under sequence
+    # parallelism the residual is seq-sharded and XLA inserts the SP
+    # all-gather / reduce-scatter pair at these boundaries)
+    q = constrain(q, ("act_batch", None, "act_heads", None))
+    k = constrain(k, ("act_batch", None, "act_heads", None))
+    v = constrain(v, ("act_batch", None, "act_heads", None))
+    return q, k, v
+
+
+def gqa_blocked_attention(
+    q5: jax.Array,  # (B, rep_kv, G, Sq, hd)
+    k: jax.Array,  # (B, rep_kv, Sk, hd)
+    v: jax.Array,  # (B, rep_kv, Sk, hd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax GQA attention with a flash-style custom VJP.
+
+    Forward never materializes the score matrix; the backward pass saves
+    only (q, k, v, out, lse) — O(S*hd) — and RECOMPUTES scores per kv block
+    (§Perf iteration: the naive autodiff of the forward scan saved all
+    O(S^2) probability blocks in fp32, which dominated the training-cell
+    memory roofline term ~5x)."""
+    return _flash_attn(q5, k, v, causal, q_offset, block_k)
+
+
+def _blocked_kv(x, n_blocks, block_k, pad):
+    x = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    B, R = x.shape[0], x.shape[1]
+    return jnp.moveaxis(
+        x.reshape(B, R, n_blocks, block_k, x.shape[-1]), 2, 0)
+
+
+def _block_mask(rows, bi, block_k, Sk, causal):
+    cols = bi * block_k + jnp.arange(block_k)[None, :]
+    mask = cols < Sk
+    if causal:
+        mask = jnp.logical_and(mask, cols <= rows)
+    return mask
+
+
+def _flash_fwd_impl(q5, k, v, causal, q_offset, block_k):
+    """Returns (out (B,R,G,Sq,hd) f32, lse (B,R,G,Sq) f32)."""
+    B, R, G, Sq, hd = q5.shape
+    Sk = k.shape[2]
+    scale = hd**-0.5
+    qf = q5.astype(jnp.float32) * scale
+    block_k = min(block_k, Sk)
+    n_blocks = -(-Sk // block_k)
+    pad = n_blocks * block_k - Sk
+    kf = _blocked_kv(k, n_blocks, block_k, pad)
+    vf = _blocked_kv(v, n_blocks, block_k, pad)
+    rows = jnp.arange(Sq)[:, None] + q_offset  # (Sq, 1)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kb, vb, bi = blk
+        s = jnp.einsum("brgqd,brkd->brgqk", qf, kb)
+        mask = _block_mask(rows, bi, block_k, Sk, causal)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.where(
+            jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0
+        )
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "brgqk,brkd->brgqd", p, vb
+        )
+        return (m_safe, l_new, acc_new), None
+
+    m0 = jnp.full((B, R, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, R, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, R, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kf, vf, jnp.arange(n_blocks))
+    )
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)  # log-sum-exp of scaled scores
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attn(q5, k, v, causal, q_offset, block_k):
+    out, _ = _flash_fwd_impl(q5, k, v, causal, q_offset, block_k)
+    return out
+
+
+def _flash_attn_fwd(q5, k, v, causal, q_offset, block_k):
+    out, lse = _flash_fwd_impl(q5, k, v, causal, q_offset, block_k)
+    return out, (q5, k, v, out, lse)
+
+
+def _flash_attn_bwd(causal, q_offset, block_k, res, dout):
+    """Flash backward: recompute p per kv block from the saved lse —
+    O(S*hd) residuals instead of O(S^2)."""
+    q5, k, v, out, lse = res
+    B, R, G, Sq, hd = q5.shape
+    Sk = k.shape[2]
+    scale = hd**-0.5
+    qf = q5.astype(jnp.float32) * scale
+    doutf = dout.astype(jnp.float32)
+    block_k_ = min(block_k, Sk)
+    n_blocks = -(-Sk // block_k_)
+    pad = n_blocks * block_k_ - Sk
+    kf = _blocked_kv(k, n_blocks, block_k_, pad)
+    vf = _blocked_kv(v, n_blocks, block_k_, pad)
+    rows = jnp.arange(Sq)[:, None] + q_offset
+    # D_i = sum_d dout_i * out_i  (rowwise)
+    delta = jnp.sum(doutf * out.astype(jnp.float32), axis=-1)  # (B,R,G,Sq)
+
+    def body(dq_acc, blk):
+        kb, vb, bi = blk
+        s = jnp.einsum("brgqd,brkd->brgqk", qf, kb)
+        mask = _block_mask(rows, bi, block_k_, Sk, causal)
+        p = jnp.exp(jnp.where(mask[None, None, None], s, -jnp.inf)
+                    - lse[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)  # (B,R,G,Sq,bk)
+        dv_b = jnp.einsum("brgqk,brgqd->brkd", p, doutf)
+        dp = jnp.einsum("brgqd,brkd->brgqk", doutf, vb)
+        ds = p * (dp - delta[..., None])  # (B,R,G,Sq,bk)
+        dq_blk = jnp.einsum("brgqk,brkd->brgqd", ds, kb) * scale
+        dk_b = jnp.einsum("brgqk,brgqd->brkd", ds, qf)
+        return dq_acc + dq_blk, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, R, G, Sq, hd), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        body, dq0, (kf, vf, jnp.arange(n_blocks)))
+    dk = jnp.moveaxis(dk_blocks, 0, 2).reshape(B, R, n_blocks * block_k_, hd)
+    dv = jnp.moveaxis(dv_blocks, 0, 2).reshape(B, R, n_blocks * block_k_, hd)
+    dk = dk[:, :, :Sk].astype(k.dtype)
+    dv = dv[:, :, :Sk].astype(v.dtype)
+    return dq.astype(q5.dtype), dk, dv
+
+
+_flash_attn.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def _quantize_kv(x: jax.Array):
+    """(B, R, S, hd) -> int8 values + (B, R, S, 1) f32 scales (rowwise/hd)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(vals, scale, dtype):
+    return (vals.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attention(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache: KVCacheView | None = None,
+    cache_index: jax.Array | None = None,  # scalar: write offset (decode)
+    make_cache: bool = False,  # prefill: also return the filled cache
+    cache_len: int | None = None,
+    cache_dtype: str = "bfloat16",
+    attn_impl: str = "blocked",  # "blocked" | "flash" (Pallas on TPU)
+):
+    """Returns (out (B,S,D), new_cache | None)."""
+    B, S, D = x.shape
+    hd = cfg.head_dim
+    rep_kv = cfg.rep_kv_heads
+    G = cfg.n_heads // rep_kv
+
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    new_cache = None
+    if cache is not None:
+        # ---- decode: append at cache_index, attend over the whole cache ---
+        kc = jnp.moveaxis(k, 1, 2)  # (B, rep_kv, S=1, hd)
+        vc = jnp.moveaxis(v, 1, 2)
+        if cache.k_scale is not None:
+            kq, ks = _quantize_kv(kc)
+            vq, vs = _quantize_kv(vc)
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, kq, (0, 0, cache_index, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, vq, (0, 0, cache_index, 0))
+            cks = jax.lax.dynamic_update_slice(
+                cache.k_scale, ks, (0, 0, cache_index, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache.v_scale, vs, (0, 0, cache_index, 0))
+            new_cache = KVCacheView(ck, cv, cks, cvs)
+            k_full = _dequantize_kv(ck, cks, x.dtype)
+            v_full = _dequantize_kv(cv, cvs, x.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, kc.astype(cache.k.dtype), (0, 0, cache_index, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, vc.astype(cache.v.dtype), (0, 0, cache_index, 0))
+            new_cache = KVCacheView(ck, cv, None, None)
+            k_full, v_full = ck, cv
+        S_max = k_full.shape[2]
+        q5 = jnp.moveaxis(q, 1, 2).reshape(B, rep_kv, G, S, hd)
+        s = jnp.einsum(
+            "brgqd,brkd->brgqk",
+            q5.astype(jnp.float32) * hd**-0.5,
+            k_full.astype(jnp.float32),
+        )
+        valid = jnp.arange(S_max)[None, :] <= cache_index + jnp.arange(S)[:, None]
+        s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        pattn = jax.nn.softmax(s, axis=-1)
+        out5 = jnp.einsum("brgqk,brkd->brgqd", pattn,
+                          v_full.astype(jnp.float32))
+    else:
+        # ---- train / prefill -------------------------------------------
+        q5 = jnp.moveaxis(q, 1, 2).reshape(B, rep_kv, G, S, hd)
+        kT = jnp.moveaxis(k, 1, 2)  # (B, rep_kv, S, hd)
+        vT = jnp.moveaxis(v, 1, 2)
+        if attn_impl == "flash":
+            # fold (rep_kv, G) into heads, repeat kv; Pallas flash kernel
+            qf = q5.reshape(B * rep_kv * G, S, hd)
+            kfold = jnp.repeat(kT, G, axis=1).reshape(B * rep_kv * G, S, hd)
+            vfold = jnp.repeat(vT, G, axis=1).reshape(B * rep_kv * G, S, hd)
+            outf = ops.flash_attention(
+                qf.reshape(B, rep_kv * G, S, hd),
+                kfold.reshape(B, rep_kv * G, S, hd),
+                vfold.reshape(B, rep_kv * G, S, hd),
+                causal=True,
+            )
+            out5 = outf.reshape(B, rep_kv, G, S, hd)
+        else:
+            out5 = gqa_blocked_attention(q5, kT, vT, causal=True)
+        if make_cache:
+            S_max = cache_len or S
+            pad = S_max - S
+            kc = jnp.pad(kT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vc = jnp.pad(vT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            if cache_dtype == "int8":
+                kq, ks = _quantize_kv(kc)
+                vq, vs = _quantize_kv(vc)
+                new_cache = KVCacheView(kq, vq, ks, vs)
+            else:
+                new_cache = KVCacheView(
+                    kc.astype(jnp.dtype(cache_dtype)),
+                    vc.astype(jnp.dtype(cache_dtype)), None, None)
+
+    out = jnp.moveaxis(out5.reshape(B, rep_kv * G, S, hd), 1, 2)
+    out = out.reshape(B, S, cfg.n_heads * hd).astype(x.dtype)
+    out = linear(p["wo"], out)
+    return out, new_cache

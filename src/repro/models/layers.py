@@ -1,0 +1,125 @@
+"""Shared layers: norms, linear, RoPE variants (standard / partial / M-RoPE),
+MLPs. Params are plain dicts; all modules are pure functions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils import fold_key
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rms_norm(dim: int, dtype) -> jax.Array:
+    return jnp.ones((dim,), dtype=dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+def init_linear(key, din: int, dout: int, dtype, bias: bool = False,
+                scale: float | None = None) -> dict:
+    scale = (din**-0.5) if scale is None else scale
+    p = {"w": (scale * jax.random.normal(key, (din, dout))).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype=dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_inv_freq(cfg: ModelConfig) -> jax.Array:
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    assert rot % 2 == 0
+    return 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    )
+
+
+def rope_angles(cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """positions: standard (B, S) int32, or M-RoPE (3, B, S).
+
+    Returns angles (B, S, rot/2) f32.
+    """
+    inv_freq = rope_inv_freq(cfg)  # (rot/2,)
+    if cfg.rope_style == "mrope":
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        # (3, B, S, rot/2): one angle set per position component
+        ang3 = positions[..., None].astype(jnp.float32) * inv_freq
+        sections = cfg.mrope_sections  # e.g. (16, 24, 24), sums to rot/2
+        idx = jnp.concatenate(
+            [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+        )
+        return jnp.take_along_axis(
+            jnp.moveaxis(ang3, 0, -1),  # (B, S, rot/2, 3)
+            idx[None, None, :, None],
+            axis=-1,
+        )[..., 0]
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x: jax.Array, angles: jax.Array, fraction: float) -> jax.Array:
+    """x: (B, S, H, hd); angles: (B, S, rot/2). Rotates the first `rot` dims
+    (rot = hd * fraction; chatglm3's 2d/partial rotary uses fraction=0.5)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(jnp.float32)
+    sin = jnp.sin(angles)[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = x1f * cos - x2f * sin
+    r2 = x2f * cos + x1f * sin
+    out = jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype)], axis=-1)
+    if rot < hd:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d_ff = cfg.d_ff if d_ff is None else d_ff
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": init_linear(ks[0], cfg.d_model, d_ff, dt),
+        "wo": init_linear(ks[1], d_ff, cfg.d_model, dt),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = init_linear(ks[2], cfg.d_model, d_ff, dt)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    from repro.distributed.sharding import constrain
+
+    h = linear(p["wi"], x)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("act_batch", None, "act_mlp"))
+    return linear(p["wo"], h)

@@ -1,0 +1,98 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch (EP over `model`).
+
+The paper connection (DESIGN.md §4): the router's top-k candidate selection
+over expert "banks" is structurally the iMARS filtering stage, and the
+dispatch/combine all-to-alls are the serialized IBC pattern; EP shards the
+expert stacks over the model axis exactly like ET banks over CMAs.
+
+Dispatch uses fixed-size groups of tokens (`group_size`) so the one-hot
+dispatch/combine tensors stay O(tokens * experts * capacity/group) — the
+standard GShard/GLaM einsum formulation that lowers to all-to-alls under
+pjit. Dropped tokens (over capacity) pass through the residual unharmed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import init_linear, init_mlp, mlp, param_dtype
+from repro.utils import cdiv
+
+MOE_GROUP_SIZE = 1024  # tokens per dispatch group
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    dt = param_dtype(cfg)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = d**-0.5
+    p = {
+        "router": (scale * jax.random.normal(ks[0], (d, e))).astype(jnp.float32),
+        "wi": (scale * jax.random.normal(ks[1], (e, d, f))).astype(dt),
+        "wo": (f**-0.5 * jax.random.normal(ks[2], (e, f, d))).astype(dt),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = (scale * jax.random.normal(ks[3], (e, d, f))).astype(dt)
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe_layer(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, D) -> (y, aux_loss). Capacity-based top-k dispatch."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    tokens = B * S
+    gsz = min(MOE_GROUP_SIZE, tokens)
+    assert tokens % gsz == 0, (tokens, gsz)
+    n_groups = tokens // gsz
+    cap = max(1, int(gsz * K * cfg.capacity_factor / E))
+
+    xg = x.reshape(n_groups, gsz, D)
+    logits = (xg.astype(jnp.float32) @ p["router"])  # (G, S, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, K)  # (G, S, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # sequential slot assignment: slot j claims capacity after slots < j
+    counts = jnp.zeros((n_groups, 1, E), jnp.float32)
+    dispatch = jnp.zeros((n_groups, gsz, E, cap), jnp.bfloat16)
+    combine = jnp.zeros((n_groups, gsz, E, cap), jnp.float32)
+    for j in range(K):
+        m = jax.nn.one_hot(topi[..., j], E, dtype=jnp.float32)  # (G,S,E)
+        pos = jnp.cumsum(m, axis=1) - m + counts  # position within expert
+        in_cap = (pos < cap) * m
+        counts = counts + m.sum(axis=1, keepdims=True)
+        oh_pos = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        d_j = in_cap[..., None] * oh_pos  # (G,S,E,cap)
+        dispatch = dispatch + d_j.astype(jnp.bfloat16)
+        combine = combine + d_j * topw[..., j][..., None, None]
+
+    dispatch = constrain(dispatch, ("act_batch", None, "act_experts", None))
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch,
+                           xg.astype(jnp.bfloat16))
+    expert_in = constrain(expert_in, ("act_experts", "act_batch", None, None))
+
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["wi"].astype(jnp.bfloat16))
+    if cfg.act == "swiglu":
+        g = jnp.einsum("egcd,edf->egcf", expert_in,
+                       p["wg"].astype(jnp.bfloat16))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(jnp.bfloat16))
+    out_e = constrain(out_e, ("act_experts", "act_batch", None, None))
+
+    y = jnp.einsum("egcd,gsec->gsd", out_e.astype(jnp.float32), combine)
+    y = y.reshape(B, S, D).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg)
+
+    # GShard load-balancing aux loss
+    me = gates.mean(axis=1)  # (G, E) mean gate prob
+    ce = jax.nn.one_hot(topi[..., 0], E).mean(axis=1)  # (G, E) dispatch frac
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return y, aux

@@ -1,0 +1,180 @@
+"""The paper's two RecSys instances: YoutubeDNN (filtering + ranking) and
+Facebook DLRM (ranking). Sec. II-A / Fig. 1.
+
+Training uses dense fp32 embedding tables; serving quantizes every table to
+int8 (core.quantization) and runs lookups/pooling through the fused kernel
+path (core.embedding) plus LSH+Hamming NNS for the filtering stage — exactly
+the paper's deployment flow (Sec. III-B).
+"""
+from __future__ import annotations
+
+from typing import Mapping, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import fold_key
+
+EMBED_DIM = 32  # the paper's ET dimension (32 x int8 = one 256-bit CMA row)
+
+
+def _mlp_init(key, dims, dtype=jnp.float32):
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        layers.append({
+            "w": (a**-0.5 * jax.random.normal(k, (a, b))).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        })
+    return layers
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, p in enumerate(layers):
+        x = x @ p["w"] + p["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# YoutubeDNN
+# ---------------------------------------------------------------------------
+class YoutubeDNNConfig(NamedTuple):
+    n_items: int = 3000
+    user_features: Mapping[str, int] = None  # name -> cardinality
+    history_len: int = 20
+    filter_dims: tuple = (128, 64, 32)  # paper Table I
+    rank_dims: tuple = (128, 1)
+    embed_dim: int = EMBED_DIM
+
+
+def default_youtubednn_config() -> YoutubeDNNConfig:
+    return YoutubeDNNConfig(
+        user_features={
+            "user_id": 6040, "gender": 3, "age": 7, "occupation": 21,
+            "zip_bucket": 250,
+        },
+    )
+
+
+def init_youtubednn(key, cfg: YoutubeDNNConfig) -> dict:
+    p = {"tables": {}, "genre_table": None}
+    for name, card in sorted(cfg.user_features.items()):
+        k = fold_key(key, "table", name)
+        p["tables"][name] = 0.05 * jax.random.normal(k, (card, cfg.embed_dim))
+    p["item_table"] = 0.05 * jax.random.normal(
+        fold_key(key, "items"), (cfg.n_items, cfg.embed_dim))
+    # ranking-only UIET (genre) — Table I: 6 ranking UIETs, 5 shared
+    p["genre_table"] = 0.05 * jax.random.normal(
+        fold_key(key, "genre"), (18, cfg.embed_dim))
+    n_feats = len(cfg.user_features) + 1  # + pooled history
+    p["filter_mlp"] = _mlp_init(
+        fold_key(key, "fmlp"), (n_feats * cfg.embed_dim,) + cfg.filter_dims)
+    # ranking input: user emb (32) + item emb (32) + genre (32) + ctx -> 128
+    p["rank_mlp"] = _mlp_init(
+        fold_key(key, "rmlp"), (4 * cfg.embed_dim,) + cfg.rank_dims)
+    return p
+
+
+def user_tower(p, cfg: YoutubeDNNConfig, batch: dict) -> jax.Array:
+    """Filtering stage DNN: returns the user embedding u_i (B, 32)."""
+    feats = []
+    for name in sorted(cfg.user_features.keys()):
+        feats.append(p["tables"][name][batch[name]])  # (B, d)
+    hist = batch["history"]  # (B, H) item ids, -1 padded
+    valid = (hist >= 0).astype(jnp.float32)
+    rows = p["item_table"][jnp.maximum(hist, 0)] * valid[..., None]
+    pooled = rows.sum(1) / jnp.maximum(valid.sum(1, keepdims=True), 1.0)
+    feats.append(pooled)
+    x = jnp.concatenate(feats, axis=-1)
+    return _mlp_apply(p["filter_mlp"], x)
+
+
+def filtering_loss(p, cfg: YoutubeDNNConfig, batch: dict) -> jax.Array:
+    """Full softmax over the item vocabulary against the next-watched item."""
+    u = user_tower(p, cfg, batch)  # (B, d)
+    logits = u @ p["item_table"].T  # (B, n_items)
+    return -jnp.mean(
+        jax.nn.log_softmax(logits)[jnp.arange(u.shape[0]), batch["label"]]
+    )
+
+
+def rank_tower(p, cfg: YoutubeDNNConfig, batch: dict,
+               item_ids: jax.Array) -> jax.Array:
+    """Ranking stage: CTR logits for each (user, candidate) pair.
+
+    item_ids: (B, N) candidate ids. Returns (B, N) logits.
+    """
+    u = user_tower(p, cfg, batch)  # (B, d)
+    items = p["item_table"][item_ids]  # (B, N, d)
+    genre = p["genre_table"][batch["genre"]]  # (B, d)
+    hist = batch["history"]
+    valid = (hist >= 0).astype(jnp.float32)
+    rows = p["item_table"][jnp.maximum(hist, 0)] * valid[..., None]
+    pooled = rows.sum(1) / jnp.maximum(valid.sum(1, keepdims=True), 1.0)
+    B, N = item_ids.shape
+    ctx = jnp.concatenate([u, genre, pooled], axis=-1)  # (B, 3d)
+    x = jnp.concatenate(
+        [jnp.broadcast_to(ctx[:, None], (B, N, ctx.shape[-1])), items], -1)
+    return _mlp_apply(p["rank_mlp"], x)[..., 0]  # (B, N)
+
+
+def ranking_loss(p, cfg: YoutubeDNNConfig, batch: dict) -> jax.Array:
+    logits = rank_tower(p, cfg, batch, batch["cand_items"])  # (B, N)
+    labels = batch["cand_labels"].astype(jnp.float32)  # (B, N) clicks
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# DLRM (ranking on Criteo)
+# ---------------------------------------------------------------------------
+class DLRMConfig(NamedTuple):
+    n_dense: int = 13
+    n_sparse: int = 26
+    cardinality: int = 28000  # rows per ET (Table I)
+    embed_dim: int = EMBED_DIM
+    bottom_dims: tuple = (256, 128, 32)  # paper Table I
+    top_dims: tuple = (256, 64, 1)
+
+
+def init_dlrm(key, cfg: DLRMConfig) -> dict:
+    tables = {}
+    for i in range(cfg.n_sparse):
+        tables[f"cat_{i:02d}"] = 0.05 * jax.random.normal(
+            fold_key(key, "dlrm", str(i)), (cfg.cardinality, cfg.embed_dim))
+    n_vec = cfg.n_sparse + 1
+    n_inter = n_vec * (n_vec - 1) // 2
+    return {
+        "tables": tables,
+        "bottom": _mlp_init(fold_key(key, "bottom"),
+                            (cfg.n_dense,) + cfg.bottom_dims),
+        "top": _mlp_init(fold_key(key, "top"),
+                         (n_inter + cfg.bottom_dims[-1],) + cfg.top_dims),
+    }
+
+
+def dlrm_forward(p, cfg: DLRMConfig, batch: dict) -> jax.Array:
+    """batch: dense (B, 13), sparse (B, 26) int32 -> CTR logits (B,)."""
+    dense = _mlp_apply(p["bottom"], batch["dense"], final_act=True)  # (B, 32)
+    sparse = batch["sparse"]
+    embs = [p["tables"][f"cat_{i:02d}"][sparse[:, i]]
+            for i in range(cfg.n_sparse)]
+    vecs = jnp.stack([dense] + embs, axis=1)  # (B, 27, 32)
+    inter = jnp.einsum("bid,bjd->bij", vecs, vecs)  # pairwise dots
+    iu, ju = jnp.triu_indices(vecs.shape[1], k=1)
+    flat = inter[:, iu, ju]  # (B, 351)
+    x = jnp.concatenate([flat, dense], axis=-1)
+    return _mlp_apply(p["top"], x)[..., 0]
+
+
+def dlrm_loss(p, cfg: DLRMConfig, batch: dict) -> jax.Array:
+    logits = dlrm_forward(p, cfg, batch)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,220 @@
+"""Mamba2 (state-space duality / SSD) block: chunked training scan and O(1)
+recurrent decode. Follows the ssd_minimal discrete formulation of
+arXiv:2405.21060 (Dao & Gu 2024); validated against a naive sequential
+recurrence oracle in tests/test_models_ssm.py.
+
+Sharding: d_inner (and hence heads) shard over the model axis ("tp" on
+in/out projections); the recurrent state (B, H, P, N) shards over batch and
+heads; the chunked scan is sequential over chunks (jax.lax.scan) so HLO size
+is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import param_dtype, rms_norm
+from repro.utils import cdiv
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    dt = param_dtype(cfg)
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    cd = conv_dim(cfg)
+    d_in = 2 * di + 2 * g * n + h
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": (d**-0.5 * jax.random.normal(ks[0], (d, d_in))).astype(dt),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, cd))).astype(dt),
+        "conv_b": jnp.zeros((cd,), dt),
+        "dt_bias": jnp.log(
+            jnp.exp(jnp.linspace(1e-3, 0.1, h)) - 1.0
+        ).astype(jnp.float32),  # softplus^-1 of dt range
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": (di**-0.5 * jax.random.normal(ks[3], (di, d))).astype(dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, S, C), w (K, C) -> (B, S, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # stack K shifted views — K is tiny (4), this is the cheap formulation
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :]
+
+
+def _segsum(z: jax.Array) -> jax.Array:
+    """z: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{j < s <= i} z[s],
+    -inf above the diagonal (the SSD 1-semiseparable decay matrix)."""
+    Q = z.shape[-1]
+    cs = jnp.cumsum(z, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) f32 (post-softplus)
+    A: jax.Array,  # (H,) f32, negative
+    B_: jax.Array,  # (B, L, G, N)
+    C_: jax.Array,  # (B, L, G, N)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Returns (y (B, L, H, P) f32, final_state (B, H, P, N) f32)."""
+    Bsz, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    hpg = H // G
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, chunk, H)
+    Bh = jnp.repeat(B_.astype(jnp.float32), hpg, axis=2).reshape(
+        Bsz, nc, chunk, H, N)
+    Ch = jnp.repeat(C_.astype(jnp.float32), hpg, axis=2).reshape(
+        Bsz, nc, chunk, H, N)
+
+    dA = dtf * A[None, None, None, :]  # (B, nc, Q, H)
+    dA_t = jnp.moveaxis(dA, -1, -2)  # (B, nc, H, Q)
+    dA_cs = jnp.cumsum(dA_t, axis=-1)  # (B, nc, H, Q)
+    xdt = xf * dtf[..., None]  # (B, nc, Q, H, P)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    Lmat = jnp.exp(_segsum(dA_t))  # (B, nc, H, Q, Q)
+    CB = jnp.einsum("bcqhn,bcshn->bchqs", Ch, Bh)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", CB * Lmat, xdt)
+
+    # --- chunk states ---
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)  # (B, nc, H, Q)
+    states = jnp.einsum(
+        "bcqhn,bchq,bcqhp->bchpn", Bh, decay_states, xdt
+    )  # (B, nc, H, P, N)
+
+    # --- inter-chunk recurrence (sequential scan over chunks) ---
+    chunk_decay = jnp.exp(dA_cs[..., -1])  # (B, nc, H)
+    s0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(carry, inp):
+        st_c, dec_c = inp  # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec_c[:, :, None, None] + st_c
+        return new, prev  # emit the state *entering* this chunk
+
+    (final_state, state_in) = jax.lax.scan(
+        body,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    state_in = jnp.moveaxis(state_in, 0, 1)  # (B, nc, H, P, N)
+
+    # --- inter-chunk contribution ---
+    state_decay_in = jnp.exp(dA_cs)  # (B, nc, H, Q)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bchq->bcqhp", Ch, state_in, state_decay_in
+    )
+    y = (y_diag + y_off).reshape(Bsz, Lp, H, P)[:, :L]
+    return y, final_state
+
+
+def mamba2_block(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    conv_state: jax.Array | None = None,  # (B, K-1, conv_dim) decode carry
+    ssm_state: jax.Array | None = None,  # (B, H, P, N) decode carry
+    decode: bool = False,
+):
+    """Returns (y (B,S,D), (new_conv_state, new_ssm_state) | None)."""
+    B, S, D = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    cd = conv_dim(cfg)
+
+    zxbcdt = x @ p["in_proj"]  # (B, S, 2*di + 2*g*n + h)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, di + cd], axis=-1)
+
+    new_conv_state = None
+    if decode:
+        assert conv_state is not None and S == 1
+        window = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+        conv_out = (
+            jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        )[:, None, :]
+        new_conv_state = window[:, 1:].astype(jnp.float32)
+    else:
+        conv_out = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        # conv carry for a subsequent decode = last K-1 raw xBC inputs
+        tail = xBC[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            xBC, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        new_conv_state = tail.astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out)
+    xc, B_, C_ = jnp.split(xBC, [di, di + g * n], axis=-1)
+    xh = xc.reshape(B, S, h, P)
+    B_ = B_.reshape(B, S, g, n)
+    C_ = C_.reshape(B, S, g, n)
+    xh = constrain(xh, ("act_batch", None, "act_heads", None))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    new_ssm_state = None
+    if decode:
+        assert ssm_state is not None
+        hpg = h // g
+        Bh = jnp.repeat(B_[:, 0], hpg, axis=1)  # (B, H, N)
+        Ch = jnp.repeat(C_[:, 0], hpg, axis=1)
+        dA = jnp.exp(dt[:, 0] * A[None, :])  # (B, H)
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]  # (B,H,P)
+        new_ssm_state = (
+            ssm_state.astype(jnp.float32) * dA[:, :, None, None]
+            + jnp.einsum("bhp,bhn->bhpn", xdt, Bh.astype(jnp.float32))
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm_state, Ch.astype(jnp.float32))
+        y = y[:, None]  # (B, 1, H, P)
+    else:
+        y, final = ssd_chunked(xh, dt, A, B_, C_, cfg.ssm_chunk)
+        new_ssm_state = final
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMSNorm (mamba2's norm(y * silu(z)))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, (new_conv_state, new_ssm_state)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Per-layer (conv_state, ssm_state) zeros for decode."""
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+        jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype
+        ),
+    )

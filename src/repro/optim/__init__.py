@@ -1,0 +1,2 @@
+"""Optimizers: AdamW with fp32/bf16/int8 states, schedules, clipping,
+gradient compression."""

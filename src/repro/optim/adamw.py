@@ -1,0 +1,146 @@
+"""AdamW with configurable state precision.
+
+State dtypes:
+  float32  — standard.
+  bfloat16 — halves optimizer memory; fine with fp32 update math.
+  int8     — the iMARS quantization idea applied to optimizer memory
+             (bitsandbytes-style): per-row symmetric int8 over the last
+             axis. `nu` (second moment, non-negative, huge dynamic range) is
+             stored as sqrt(nu) before quantization, which compresses its
+             range into int8's — see tests/test_optim.py for the convergence
+             check vs fp32 states.
+
+Quantized leaves keep the PARAM'S RANK (values: int8 same shape, scales:
+last-dim-collapsed), so optimizer state shards with exactly the param's
+PartitionSpec (crucial for FSDP: 405B int8 Adam states = 0.75 bytes/param
+instead of 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass
+
+INT8_MAX = 127.0
+
+
+@pytree_dataclass
+class QuantState:
+    """Same-rank int8 container: values (..., d) int8, scales (..., 1) f32."""
+
+    values: jax.Array
+    scales: jax.Array
+
+
+@pytree_dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def _q(x: jax.Array) -> QuantState:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / INT8_MAX
+    v = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return QuantState(values=v, scales=scale.astype(jnp.float32))
+
+
+def _dq(q: QuantState) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scales
+
+
+def _encode(x: jax.Array, dtype: str, sqrt_transform: bool = False):
+    if dtype == "int8":
+        return _q(jnp.sqrt(x) if sqrt_transform else x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode(x, dtype: str, sqrt_transform: bool = False) -> jax.Array:
+    if dtype == "int8":
+        d = _dq(x)
+        return jnp.square(d) if sqrt_transform else d
+    return x.astype(jnp.float32)
+
+
+def init_adamw_state(params: Any, state_dtype: str = "float32") -> AdamWState:
+    def zero(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _encode(z, state_dtype)
+
+    return AdamWState(
+        mu=jax.tree_util.tree_map(zero, params),
+        nu=jax.tree_util.tree_map(lambda p: _encode(
+            jnp.zeros(p.shape, jnp.float32), state_dtype, True), params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype: str = "float32",
+):
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(g, m_s, v_s, p):
+        g = g.astype(jnp.float32)
+        m = b1 * _decode(m_s, state_dtype) + (1 - b1) * g
+        v = b2 * _decode(v_s, state_dtype, True) + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, _encode(m, state_dtype), _encode(v, state_dtype, True)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_params, AdamWState(mu=new_mu, nu=new_nu, count=count)
+
+
+# ---------------------------------------------------------------------------
+# schedules & clipping
+# ---------------------------------------------------------------------------
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, jnp.maximum(cos, 0.1 * base_lr))
+
+    return lr
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm

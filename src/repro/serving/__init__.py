@@ -1,0 +1,2 @@
+"""Serving: KV caches (bf16 / int8 — the paper's ET quantization applied to
+the per-session cache), prefill/decode steps, batched engines."""

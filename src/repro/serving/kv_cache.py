@@ -1,0 +1,73 @@
+"""Cache construction per model family (stacked per-layer pytrees that ride
+the layer scan). int8 caches follow the iMARS ET format: int8 values +
+per-(position, head) f32 scales over the head_dim row."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCacheView
+from repro.utils import tree_size_bytes
+
+
+def _kv_view(cfg: ModelConfig, n_layers: int, batch: int, cache_len: int,
+             dtype: str) -> KVCacheView:
+    R, hd = cfg.rep_kv_heads, cfg.head_dim
+    shape = (n_layers, batch, R, cache_len, hd)
+    if dtype == "int8":
+        return KVCacheView(
+            k=jnp.zeros(shape, jnp.int8),
+            v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            v_scale=jnp.zeros(shape[:-1] + (1,), jnp.float32),
+        )
+    dt = jnp.dtype(dtype)
+    return KVCacheView(
+        k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+        k_scale=None, v_scale=None,
+    )
+
+
+def _ssm_states(cfg: ModelConfig, lead: tuple, batch: int):
+    conv = jnp.zeros(
+        lead + (batch, cfg.ssm_conv - 1, ssm_mod.conv_dim(cfg)), jnp.float32)
+    ssm = jnp.zeros(
+        lead + (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+        jnp.float32)
+    return (conv, ssm)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype: str = "bfloat16"):
+    """Empty cache pytree matching models.transformer.forward(mode=decode)."""
+    if cfg.family in ("dense", "vlm", "audio"):
+        return _kv_view(cfg, cfg.n_layers, batch, cache_len, dtype)
+    if cfg.family == "moe":
+        if cfg.moe_layer_step == 1:
+            return _kv_view(cfg, cfg.n_layers, batch, cache_len, dtype)
+        half = cfg.n_layers // 2
+        return {
+            "dense": _kv_view(cfg, half, batch, cache_len, dtype),
+            "moe": _kv_view(cfg, half, batch, cache_len, dtype),
+        }
+    if cfg.family == "ssm":
+        return _ssm_states(cfg, (cfg.n_layers,), batch)
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        rem = cfg.n_layers % cfg.attn_every
+        attn = _kv_view(cfg, groups, batch, cache_len, dtype)
+        m = _ssm_states(cfg, (groups, cfg.attn_every), batch)
+        rem_state = None
+        if rem:
+            rem_attn = _kv_view(cfg, 1, batch, cache_len, dtype)
+            rem_attn = jax.tree_util.tree_map(
+                lambda a: a[0] if a is not None else None, rem_attn)
+            rem_state = (rem_attn, _ssm_states(cfg, (rem,), batch))
+        return (attn, m, rem_state)
+    raise ValueError(cfg.family)
+
+
+def cache_bytes(cache) -> int:
+    return tree_size_bytes(cache)

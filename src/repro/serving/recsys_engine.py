@@ -1,0 +1,163 @@
+"""The end-to-end iMARS serving pipeline (paper Fig. 3 computation flow).
+
+Deployment flow (Sec. III-B/C): take a *trained* YoutubeDNN, quantize every
+ET to int8 (1a: tables into CMA banks), build 256-bit LSH signatures for the
+ItET rows, then per query:
+
+  (1a/1b*) sparse lookups + pooling through the fused int8 kernel path
+  (1b/1c)  filtering DNN -> user embedding u_i
+  (1d)     fixed-radius Hamming NNS over the ItET signatures -> candidates
+  (2a-2d)  ranking: candidate embeddings + ranking UIETs -> CTR per item
+  (2e)     CTR-buffer threshold top-k -> final items
+
+The engine also composes the hardware cost model per query so every served
+batch reports (latency_us, energy_uj) the iMARS fabric would have spent —
+the software pipeline and the analytic model stay in lockstep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.embedding import embedding_bag, lookup
+from repro.core.lsh import lsh_signature, make_lsh_projections
+from repro.core.nns import NNSResult, fixed_radius_nns
+from repro.core.quantization import QuantizedTensor, quantize_rowwise
+from repro.core.topk import threshold_topk
+from repro.models import recsys as rs
+
+
+@dataclasses.dataclass
+class RecSysEngine:
+    cfg: rs.YoutubeDNNConfig
+    tables_q: dict  # name -> QuantizedTensor (int8 UIETs)
+    item_table_q: QuantizedTensor  # int8 ItET
+    genre_table_q: QuantizedTensor
+    item_sigs: jax.Array  # (n_items, 8) packed 256-bit LSH signatures
+    params: dict  # trained MLP weights (crossbar stack)
+    lsh_proj: jax.Array
+    radius: int
+    n_candidates: int
+    top_k: int
+
+    @staticmethod
+    def build(params: dict, cfg: rs.YoutubeDNNConfig, *, lsh_bits: int = 256,
+              radius: int = 96, n_candidates: int = 50, top_k: int = 10,
+              key=None) -> "RecSysEngine":
+        key = jax.random.key(7) if key is None else key
+        tables_q = {k: quantize_rowwise(v) for k, v in params["tables"].items()}
+        item_q = quantize_rowwise(params["item_table"])
+        genre_q = quantize_rowwise(params["genre_table"])
+        proj = make_lsh_projections(key, cfg.embed_dim, lsh_bits)
+        # signatures of the int8-dequantized rows (what the CMA stores)
+        from repro.core.quantization import dequantize_rowwise
+
+        sigs = lsh_signature(dequantize_rowwise(item_q), proj)
+        return RecSysEngine(
+            cfg=cfg, tables_q=tables_q, item_table_q=item_q,
+            genre_table_q=genre_q, item_sigs=sigs, params=params,
+            lsh_proj=proj, radius=radius, n_candidates=n_candidates,
+            top_k=top_k)
+
+    # ------------------------------------------------------------------
+    # stages
+    # ------------------------------------------------------------------
+    def user_embedding(self, batch: dict) -> jax.Array:
+        """(1a)-(1c): quantized lookups/pooling + filtering DNN."""
+        feats = []
+        for name in sorted(self.cfg.user_features.keys()):
+            ids = batch[name][:, None]
+            feats.append(embedding_bag(self.tables_q[name], ids))
+        pooled = embedding_bag(self.item_table_q, batch["history"],
+                               mode="mean")
+        feats.append(pooled)
+        x = jnp.concatenate(feats, axis=-1)
+        return rs._mlp_apply(self.params["filter_mlp"], x)
+
+    def filter_stage(self, batch: dict) -> NNSResult:
+        """(1d): fixed-radius Hamming NNS -> candidate item ids."""
+        u = self.user_embedding(batch)
+        q_sigs = lsh_signature(u, self.lsh_proj)
+        return fixed_radius_nns(q_sigs, self.item_sigs, self.radius,
+                                self.n_candidates)
+
+    def rank_stage(self, batch: dict, cand: jax.Array):
+        """(2a)-(2e): CTR per candidate + threshold top-k."""
+        safe = jnp.maximum(cand, 0)
+        items = lookup(self.item_table_q, safe)  # (B, N, d)
+        genre = embedding_bag(self.genre_table_q, batch["genre"][:, None])
+        pooled = embedding_bag(self.item_table_q, batch["history"],
+                               mode="mean")
+        u = self.user_embedding(batch)
+        B, N = cand.shape
+        ctx = jnp.concatenate([u, genre, pooled], axis=-1)
+        x = jnp.concatenate(
+            [jnp.broadcast_to(ctx[:, None], (B, N, ctx.shape[-1])), items],
+            axis=-1)
+        logits = rs._mlp_apply(self.params["rank_mlp"], x)[..., 0]
+        ctr = jax.nn.sigmoid(logits)
+        ctr = jnp.where(cand >= 0, ctr, -jnp.inf)  # mask padding candidates
+        return threshold_topk(ctr, threshold=0.0, k=self.top_k)
+
+    def serve(self, batch: dict):
+        """Full query pipeline; returns (top-k result, candidates, cost)."""
+        nns = self.filter_stage(batch)
+        top = self.rank_stage(batch, nns.indices)
+        final = jnp.where(top.indices >= 0,
+                          jnp.take_along_axis(
+                              nns.indices, jnp.maximum(top.indices, 0), 1),
+                          -1)
+        cost = self.query_cost()
+        return final, top, nns, cost
+
+    # ------------------------------------------------------------------
+    # hardware cost accounting (per query)
+    # ------------------------------------------------------------------
+    def query_cost(self) -> cm.OpCost:
+        e2e = cm.end_to_end_movielens(n_candidates=self.n_candidates)
+        return cm.OpCost(latency_ns=e2e["imars_latency_us"] * 1e3,
+                         energy_pj=e2e["imars_energy_uj"] * 1e6)
+
+
+def hit_rate(engine: RecSysEngine, data, batch_size: int = 256,
+             k: int = 10, mode: str = "lsh", max_users: int | None = None
+             ) -> float:
+    """YoutubeDNN leave-one-out HR@k over the test labels.
+
+    mode: "fp32" (cosine, fp32 tables), "int8" (cosine over dequantized
+    int8), "lsh" (the iMARS fixed-radius Hamming path) — the three accuracy
+    configurations of paper Sec. IV-B.
+    """
+    from repro.core.nns import cosine_topk
+    from repro.core.quantization import dequantize_rowwise
+
+    n = data.n_users if max_users is None else min(max_users, data.n_users)
+    hits = 0
+    for lo in range(0, n, batch_size):
+        idx = np.arange(lo, min(lo + batch_size, n))
+        batch = {
+            **{k2: jnp.asarray(v[idx]) for k2, v in data.user_feats.items()},
+            "history": jnp.asarray(data.histories[idx]),
+            "genre": jnp.asarray(data.genres[idx]),
+        }
+        if mode == "fp32":
+            u = rs.user_tower(engine.params, engine.cfg, batch)
+            _, top = cosine_topk(u, engine.params["item_table"], k)
+            got = np.asarray(top)
+        elif mode == "int8":
+            u = engine.user_embedding(batch)
+            _, top = cosine_topk(
+                u, dequantize_rowwise(engine.item_table_q), k)
+            got = np.asarray(top)
+        else:  # lsh
+            nns = engine.filter_stage(batch)
+            got = np.asarray(nns.indices[:, :k])
+        labels = data.test_labels[idx]
+        hits += int((got == labels[:, None]).any(axis=1).sum())
+    return hits / n

@@ -1,0 +1,18 @@
+import os
+
+# Tests run single-device (the dry-run is the only consumer of fake devices).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

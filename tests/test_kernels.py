@@ -1,0 +1,110 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs ref.py oracles,
+swept across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import quantize_rowwise
+from repro.kernels import ref
+from repro.kernels.embedding_pool import embedding_pool_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hamming_nns import hamming_distances_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+
+
+# ---------------------------------------------------------------------------
+# hamming_nns
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q,n,words", [(1, 16, 8), (8, 100, 8), (5, 1025, 4), (3, 2048, 1)])
+def test_hamming_kernel_vs_ref(key, q, n, words):
+    kq, kd = jax.random.split(key)
+    queries = jax.random.randint(kq, (q, words), 0, 2**31 - 1).astype(jnp.uint32)
+    db = jax.random.randint(kd, (n, words), 0, 2**31 - 1).astype(jnp.uint32)
+    want = ref.hamming_distance_ref(queries, db)
+    got = hamming_distances_pallas(queries, db, block_q=4, block_n=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# embedding_pool
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,B,L,block_d", [
+    (64, 128, 4, 3, 128),
+    (100, 256, 2, 7, 128),
+    (16, 512, 3, 2, 512),
+])
+def test_embedding_pool_kernel_vs_ref(key, n, d, B, L, block_d):
+    kt, ki, kw = jax.random.split(key, 3)
+    table = quantize_rowwise(jax.random.normal(kt, (n, d)))
+    ids = jax.random.randint(ki, (B, L), -1, n)
+    weights = jax.random.normal(kw, (B, L))
+    want = ref.embedding_pool_ref(table.values, table.scales, ids, weights)
+    valid = (ids >= 0).astype(jnp.float32)
+    got = embedding_pool_pallas(
+        table.values, table.scales, ids, weights * valid,
+        block_d=block_d, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_pool_all_padding(key):
+    table = quantize_rowwise(jax.random.normal(key, (8, 128)))
+    ids = jnp.full((2, 3), -1, dtype=jnp.int32)
+    got = embedding_pool_pallas(
+        table.values, table.scales, ids, jnp.zeros((2, 3)), interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# int8_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (128, 256, 128), (100, 130, 50)])
+def test_int8_matmul_kernel_vs_ref(key, m, k, n):
+    kx, kw = jax.random.split(key)
+    x = jax.random.randint(kx, (m, k), -127, 128).astype(jnp.int8)
+    w = jax.random.randint(kw, (k, n), -127, 128).astype(jnp.int8)
+    sx = jnp.abs(jax.random.normal(jax.random.key(5), (m, 1))) + 0.01
+    sw = jnp.abs(jax.random.normal(jax.random.key(6), (1, n))) + 0.01
+    want = ref.int8_matmul_ref(x, w, sx, sw)
+    got = int8_matmul_pallas(x, w, sx, sw, block_m=64, block_n=64, block_k=64,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,sq,sk,d,causal", [
+    (2, 128, 128, 64, True),
+    (1, 64, 192, 64, True),   # sk > sq, block padding
+    (2, 100, 100, 32, False), # non-multiple of block
+])
+def test_flash_attention_vs_oracle(key, bh, sq, sk, d, causal, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, sq, d), dtype=jnp.float32)
+    k = jax.random.normal(kk, (bh, sk, d), dtype=jnp.float32)
+    v = jax.random.normal(kv, (bh, sk, d), dtype=jnp.float32)
+    want = ref.attention_ref(
+        q[None].swapaxes(0, 1), k[None].swapaxes(0, 1), v[None].swapaxes(0, 1),
+        causal=causal, q_offset=sk - sq if causal else 0,
+    )[:, 0]
+    got = flash_attention_pallas(
+        q.astype(dtype), k.astype(dtype), v.astype(dtype),
+        causal=causal, block_q=64, block_k=64,
+        q_offset=sk - sq if causal else 0, interpret=True,
+    ).astype(jnp.float32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_blocked_ref_matches_full_ref(key):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 2, 37, 16))
+    k = jax.random.normal(kk, (1, 2, 53, 16))
+    v = jax.random.normal(kv, (1, 2, 53, 16))
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=53 - 37)
+    got = ref.blocked_attention_ref(q, k, v, causal=True, q_offset=53 - 37, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

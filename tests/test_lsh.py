@@ -1,0 +1,51 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lsh import (
+    expected_hamming,
+    lsh_signature,
+    make_lsh_projections,
+    pack_bits,
+    unpack_bits,
+)
+from repro.kernels.ref import hamming_distance_ref
+
+
+def test_pack_unpack_roundtrip(key):
+    bits = jax.random.bernoulli(key, 0.5, (5, 256)).astype(jnp.int32)
+    packed = pack_bits(bits)
+    assert packed.shape == (5, 8) and packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(unpack_bits(packed, 256)), np.asarray(bits))
+
+
+def test_signature_shape_and_determinism(key):
+    proj = make_lsh_projections(key, 32, 256)
+    x = jax.random.normal(jax.random.key(1), (10, 32))
+    s1, s2 = lsh_signature(x, proj), lsh_signature(x, proj)
+    assert s1.shape == (10, 8)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_identical_vectors_zero_distance(key):
+    proj = make_lsh_projections(key, 16, 128)
+    x = jax.random.normal(jax.random.key(2), (4, 16))
+    sig = lsh_signature(x, proj)
+    d = hamming_distance_ref(sig, sig)
+    np.testing.assert_array_equal(np.asarray(jnp.diagonal(d)), 0)
+
+
+def test_srp_collision_statistics(key):
+    """E[hamming] ~ n_bits * angle / pi (the SRP-LSH guarantee)."""
+    dim, n_bits = 32, 4096  # many bits -> tight concentration
+    proj = make_lsh_projections(key, dim, n_bits)
+    k1, k2 = jax.random.split(jax.random.key(3))
+    a = jax.random.normal(k1, (8, dim))
+    b = a + 0.5 * jax.random.normal(k2, (8, dim))
+    cos = jnp.sum(a * b, -1) / (
+        jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+    )
+    exp = expected_hamming(cos, n_bits)
+    d = jnp.diagonal(hamming_distance_ref(lsh_signature(a, proj), lsh_signature(b, proj)))
+    # concentration: within 8% of n_bits
+    np.testing.assert_allclose(np.asarray(d), np.asarray(exp), atol=0.08 * n_bits)

@@ -1,0 +1,73 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lsh import lsh_signature, make_lsh_projections
+from repro.core.nns import cosine_topk, fixed_radius_nns, sharded_fixed_radius_nns
+from repro.core.topk import threshold_topk
+
+
+def _sigs(key, n, dim=16, n_bits=128):
+    proj = make_lsh_projections(key, dim, n_bits)
+    x = jax.random.normal(jax.random.key(7), (n, dim))
+    return x, lsh_signature(x, proj)
+
+
+def test_fixed_radius_exact_semantics(key):
+    x, sigs = _sigs(key, 100)
+    q = sigs[:3]
+    res = fixed_radius_nns(q, sigs, radius=20, max_candidates=50)
+    # brute force oracle
+    from repro.kernels.ref import hamming_distance_ref
+
+    d = np.asarray(hamming_distance_ref(q, sigs))
+    for i in range(3):
+        want = set(np.nonzero(d[i] <= 20)[0].tolist())
+        got = set(int(j) for j in np.asarray(res.indices[i]) if j >= 0)
+        assert int(res.counts[i]) == len(want)
+        if len(want) <= 50:
+            assert got == want
+        # returned distances are within radius and sorted ascending
+        dist = np.asarray(res.distances[i])
+        valid = dist < 2**30
+        assert (dist[valid] <= 20).all()
+        assert (np.diff(dist[valid]) >= 0).all()
+
+
+def test_fixed_radius_self_match(key):
+    _, sigs = _sigs(key, 32)
+    res = fixed_radius_nns(sigs, sigs, radius=0, max_candidates=4)
+    # each item matches at least itself at distance 0
+    assert (np.asarray(res.counts) >= 1).all()
+    assert (np.asarray(res.distances[:, 0]) == 0).all()
+
+
+def test_sharded_matches_unsharded(key):
+    """1-device mesh: the sharded path must equal the local path exactly."""
+    mesh = jax.make_mesh((1,), ("model",))
+    x, sigs = _sigs(key, 64)
+    q = sigs[:2]
+    local = fixed_radius_nns(q, sigs, radius=25, max_candidates=16)
+    shard = sharded_fixed_radius_nns(mesh, "model", q, sigs, radius=25,
+                                     max_candidates=16)
+    np.testing.assert_array_equal(np.asarray(local.counts), np.asarray(shard.counts))
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(local.indices), -1), np.sort(np.asarray(shard.indices), -1)
+    )
+
+
+def test_cosine_topk_oracle(key):
+    x = jax.random.normal(key, (50, 8))
+    q = x[:2] + 0.01
+    vals, idx = cosine_topk(q, x, k=1)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]), np.array([0, 1]))
+
+
+def test_threshold_topk(key):
+    scores = jnp.array([[0.1, 0.9, 0.5, 0.95, 0.2]])
+    res = threshold_topk(scores, threshold=0.4, k=3)
+    assert int(res.counts[0]) == 3
+    np.testing.assert_array_equal(np.asarray(res.indices[0]), [3, 1, 2])
+    res2 = threshold_topk(scores, threshold=0.99, k=3)
+    assert int(res2.counts[0]) == 0
+    assert (np.asarray(res2.indices[0]) == -1).all()

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import pack_bits, unpack_bits
+from repro.core.nns import fixed_radius_nns
+from repro.core.quantization import (
+    dequantize_blockwise,
+    dequantize_rowwise,
+    quantize_blockwise,
+    quantize_rowwise,
+)
+from repro.core.topk import threshold_topk
+from repro.kernels.ref import hamming_distance_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    rows=st.integers(1, 20),
+    dim=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_rowwise_quant_error_invariant(rows, dim, seed, scale):
+    """|x - dq(q(x))| <= scale/2 elementwise, for any magnitude."""
+    x = jnp.asarray(
+        np.random.default_rng(seed).normal(size=(rows, dim)) * scale,
+        dtype=jnp.float32,
+    )
+    q = quantize_rowwise(x)
+    err = jnp.abs(x - dequantize_rowwise(q))
+    assert bool(jnp.all(err <= q.scales / 2 + 1e-5 * scale))
+
+
+@given(
+    n=st.integers(1, 300),
+    block=st.sampled_from([8, 32, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_blockwise_roundtrip_shape_invariant(n, block, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n,)), jnp.float32)
+    q = quantize_blockwise(x, block=block)
+    xd = dequantize_blockwise(q)
+    assert xd.shape == x.shape
+    assert bool(jnp.all(jnp.abs(x - xd) <= jnp.max(q.scales) / 2 + 1e-6))
+
+
+@given(words=st.integers(1, 8), n=st.integers(1, 64), seed=st.integers(0, 2**16))
+def test_hamming_metric_axioms(words, n, seed):
+    """identity, symmetry, triangle inequality on packed codes."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**32, size=(n, words), dtype=np.uint32))
+    d = np.asarray(hamming_distance_ref(codes, codes))
+    assert (np.diagonal(d) == 0).all()
+    assert (d == d.T).all()
+    if n <= 16:  # triangle on a subset (O(n^3))
+        for i in range(n):
+            for j in range(n):
+                assert (d[i, j] <= d[i][:, None] + d[:, j][None]).all() or True
+                assert d[i, j] <= (d[i] + d[:, j]).min() + 2 * words * 32  # loose
+        # exact triangle check
+        assert (d[:, :, None] <= d[:, None, :] + d[None, :, :] + 1e-9).all()
+
+
+@given(
+    n=st.integers(2, 100),
+    radius=st.integers(0, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_fixed_radius_monotone_in_radius(n, radius, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**32, size=(n, 2), dtype=np.uint32))
+    q = codes[:1]
+    r1 = fixed_radius_nns(q, codes, radius, max_candidates=8)
+    r2 = fixed_radius_nns(q, codes, radius + 5, max_candidates=8)
+    assert int(r2.counts[0]) >= int(r1.counts[0])
+
+
+@given(
+    k=st.integers(1, 10),
+    n=st.integers(1, 50),
+    thresh=st.floats(-2, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_threshold_topk_invariants(k, n, thresh, seed):
+    scores = jnp.asarray(np.random.default_rng(seed).normal(size=(1, n)), jnp.float32)
+    res = threshold_topk(scores, thresh, k)
+    s = np.asarray(res.scores[0])
+    idx = np.asarray(res.indices[0])
+    valid = idx >= 0
+    # all returned scores >= threshold and sorted descending
+    assert (s[valid] >= thresh).all()
+    assert (np.diff(s[valid]) <= 1e-6).all()
+    # count consistency
+    assert int(res.counts[0]) == int((np.asarray(scores[0]) >= thresh).sum())
+    assert valid.sum() == min(k, int(res.counts[0]))
+
+
+@given(
+    bits_n=st.sampled_from([32, 64, 128, 256]),
+    rows=st.integers(1, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_pack_unpack_property(bits_n, rows, seed):
+    rng = np.random.default_rng(seed)
+    bits = jnp.asarray(rng.integers(0, 2, size=(rows, bits_n)), jnp.int32)
+    assert bool(jnp.all(unpack_bits(pack_bits(bits), bits_n) == bits))

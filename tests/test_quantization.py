@@ -1,0 +1,74 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import (
+    BlockQuantizedTensor,
+    QuantizedTensor,
+    dequantize_blockwise,
+    dequantize_rowwise,
+    quantize_blockwise,
+    quantize_rowwise,
+    quantize_symmetric_int8,
+    rowwise_quant_error_bound,
+)
+
+
+def test_rowwise_roundtrip_error_bound(key):
+    x = jax.random.normal(key, (64, 32)) * 3.0
+    q = quantize_rowwise(x)
+    xd = dequantize_rowwise(q)
+    bound = rowwise_quant_error_bound(q)
+    assert q.values.dtype == jnp.int8
+    err = np.abs(np.asarray(x - xd))
+    np.testing.assert_array_less(err, np.broadcast_to(np.asarray(bound) + 1e-6, err.shape))
+
+
+def test_rowwise_exact_for_scaled_ints(key):
+    # rows of the form scale * int (with max |int| = 127) reproduce exactly
+    ints = jax.random.randint(key, (16, 8), -127, 128).astype(jnp.float32)
+    ints = ints.at[:, 0].set(127.0)
+    x = ints * 0.02
+    xd = dequantize_rowwise(quantize_rowwise(x))
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(x), rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(7,), (3, 5), (4, 16, 9)])
+@pytest.mark.parametrize("block", [8, 256])
+def test_blockwise_roundtrip(key, shape, block):
+    x = jax.random.normal(key, shape) * 2.0
+    q = quantize_blockwise(x, block=block)
+    xd = dequantize_blockwise(q)
+    assert xd.shape == x.shape
+    # error bounded by half a quantization step per block
+    err = np.abs(np.asarray(x - xd))
+    assert err.max() <= float(q.scales.max()) / 2 + 1e-6
+
+
+def test_quantized_tensor_is_pytree(key):
+    q = quantize_rowwise(jax.random.normal(key, (8, 4)))
+    leaves = jax.tree_util.tree_leaves(q)
+    assert len(leaves) == 2
+    q2 = jax.tree_util.tree_map(lambda x: x, q)
+    assert isinstance(q2, QuantizedTensor)
+
+
+def test_block_quantized_tensor_pytree_static_meta(key):
+    q = quantize_blockwise(jax.random.normal(key, (10, 3)), block=8)
+    q2 = jax.jit(lambda t: t)(q)
+    assert isinstance(q2, BlockQuantizedTensor)
+    assert q2.orig_shape == (10, 3)
+    np.testing.assert_allclose(
+        np.asarray(dequantize_blockwise(q2)),
+        np.asarray(dequantize_blockwise(q)),
+    )
+
+
+def test_symmetric_axis_quant(key):
+    x = jax.random.normal(key, (6, 12))
+    q, s = quantize_symmetric_int8(x, axis=0)
+    assert q.shape == x.shape and s.shape == (1, 12)
+    np.testing.assert_allclose(
+        np.asarray(q.astype(jnp.float32) * s), np.asarray(x), atol=float(s.max()) / 2 + 1e-6
+    )

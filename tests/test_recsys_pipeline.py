@@ -1,0 +1,117 @@
+"""End-to-end behaviour tests for the paper's system: train YoutubeDNN /
+DLRM on synthetic data, build the iMARS serving engine, serve queries, and
+check the accuracy ordering of Sec. IV-B (small-scale smoke; the full run
+is benchmarks/accuracy_hr.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.models import recsys as rs
+from repro.optim import adamw
+from repro.serving.recsys_engine import RecSysEngine, hit_rate
+
+
+def _adam_fit(params, loss_fn, batches, lr=3e-3):
+    state = adamw.init_adamw_state(params)
+    lg = jax.jit(jax.value_and_grad(loss_fn))
+    losses = []
+    for batch in batches:
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, g = lg(params, b)
+        params, state = adamw.adamw_update(g, state, params, lr,
+                                           weight_decay=0.0)
+        losses.append(float(loss))
+    return params, losses
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return synthetic.make_movielens(n_users=400, n_items=300, history_len=8)
+
+
+@pytest.fixture(scope="module")
+def trained(small_data):
+    data = small_data
+    cfg = rs.YoutubeDNNConfig(
+        n_items=data.n_items,
+        user_features={"user_id": data.n_users, "gender": 3, "age": 7,
+                       "occupation": 21, "zip_bucket": 250},
+        history_len=8)
+    params = rs.init_youtubednn(jax.random.key(0), cfg)
+    params, _ = _adam_fit(params, lambda p, b: rs.filtering_loss(p, cfg, b),
+                          synthetic.movielens_batches(data, 128, 250))
+    params, _ = _adam_fit(params, lambda p, b: rs.ranking_loss(p, cfg, b),
+                          synthetic.movielens_rank_batches(data, 64, 8, 80))
+    return params, cfg
+
+
+def test_filtering_training_learns(small_data):
+    data = small_data
+    cfg = rs.YoutubeDNNConfig(
+        n_items=data.n_items,
+        user_features={"user_id": data.n_users, "gender": 3, "age": 7,
+                       "occupation": 21, "zip_bucket": 250},
+        history_len=8)
+    params = rs.init_youtubednn(jax.random.key(0), cfg)
+    params, losses = _adam_fit(
+        params, lambda p, b: rs.filtering_loss(p, cfg, b),
+        synthetic.movielens_batches(data, 128, 120))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_engine_serves_and_costs(trained, small_data):
+    params, cfg = trained
+    engine = RecSysEngine.build(params, cfg, radius=110, n_candidates=20,
+                                top_k=5)
+    data = small_data
+    idx = np.arange(8)
+    batch = {
+        **{k: jnp.asarray(v[idx]) for k, v in data.user_feats.items()},
+        "history": jnp.asarray(data.histories[idx]),
+        "genre": jnp.asarray(data.genres[idx]),
+    }
+    final, top, nns, cost = engine.serve(batch)
+    assert final.shape == (8, 5)
+    # returned ids are valid or -1
+    arr = np.asarray(final)
+    assert ((arr >= -1) & (arr < data.n_items)).all()
+    # the hardware cost model rides along (N_candidates=20 here)
+    from repro.core import cost_model as cm
+    want = cm.end_to_end_movielens(n_candidates=20)
+    assert cost.latency_us == pytest.approx(want["imars_latency_us"], rel=1e-6)
+    assert cost.energy_uj == pytest.approx(want["imars_energy_uj"], rel=1e-6)
+
+
+def test_accuracy_ordering_fp32_int8_lsh(trained, small_data):
+    """Paper Sec. IV-B: HR(fp32-cos) >= HR(int8-cos) > HR(lsh) and the int8
+    drop is small; all three far above chance."""
+    params, cfg = trained
+    engine = RecSysEngine.build(params, cfg, radius=115, n_candidates=64)
+    hr_fp32 = hit_rate(engine, small_data, k=10, mode="fp32")
+    hr_int8 = hit_rate(engine, small_data, k=10, mode="int8")
+    hr_lsh = hit_rate(engine, small_data, k=10, mode="lsh")
+    chance = 10 / small_data.n_items
+    # synthetic data reproduces the paper's ORDERING (see DESIGN.md §7):
+    # fp32 ~ int8 (paper -0.6pt), LSH-Hamming strictly cheaper (paper -5.4pt)
+    assert hr_fp32 > 1.2 * chance  # above random retrieval
+    assert abs(hr_fp32 - hr_int8) < 0.02  # int8 ~ fp32
+    assert hr_lsh <= hr_int8 + 0.01  # LSH does not beat exact cosine
+
+
+def test_dlrm_trains(key):
+    cfg = rs.DLRMConfig(cardinality=500)
+    params = rs.init_dlrm(key, cfg)
+    params, losses = _adam_fit(
+        params, lambda p, b: rs.dlrm_loss(p, cfg, b),
+        synthetic.make_criteo_batches(256, 150, cardinality=500))
+    assert losses[-1] < losses[0] - 0.05, (losses[0], losses[-1])
+    b = {k: jnp.asarray(v) for k, v in
+         next(iter(synthetic.make_criteo_batches(512, 1, cardinality=500,
+                                                 seed=9))).items()}
+    # AUC-ish sanity: predictions separate the classes
+    logits = rs.dlrm_forward(params, cfg, b)
+    pos = np.asarray(logits)[np.asarray(b["label"]) == 1].mean()
+    neg = np.asarray(logits)[np.asarray(b["label"]) == 0].mean()
+    assert pos > neg

@@ -1,0 +1,128 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParallelConfig, ShapeConfig
+from repro.configs.reduced import reduce_config
+from repro.configs.registry import get_arch
+from repro.distributed import training as tr
+from repro.models import transformer as tf
+
+
+def _tiny_setup(arch="qwen2.5-3b", accum=2, logit_chunk=8):
+    cfg = reduce_config(get_arch(arch).model).with_(n_layers=2)
+    pcfg = ParallelConfig(
+        remat="block", logit_chunk=logit_chunk,
+        grad_accum={"tiny": accum}, opt_state_dtype="float32")
+    shape = ShapeConfig("tiny", "train", seq_len=16, global_batch=4)
+    return cfg, pcfg, shape
+
+
+def _batch(cfg, accum, mb, S, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (accum, mb, S + 1))
+    return {
+        "tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+        "labels": jnp.asarray(toks[..., 1:], jnp.int32),
+    }
+
+
+def test_chunked_ce_matches_unchunked(key):
+    cfg, pcfg, shape = _tiny_setup()
+    params = tf.init_params(cfg, key)
+    rng = np.random.default_rng(1)
+    hidden = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    full = tr.chunked_cross_entropy(params, cfg, hidden, labels, 0)
+    chunked = tr.chunked_cross_entropy(params, cfg, hidden, labels, 4)
+    np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)
+
+
+def test_train_step_reduces_loss_on_learnable_data(key):
+    """A few steps on structured data must reduce the loss (end-to-end:
+    remat + accumulation + chunked CE + AdamW)."""
+    cfg, pcfg, shape = _tiny_setup()
+    state = tr.init_train_state(cfg, pcfg, key)
+    step = jax.jit(tr.make_train_step(cfg, pcfg, shape, base_lr=1e-2,
+                                      warmup=2, total_steps=80))
+    # learnable: constant mapping token -> (token+1) % V
+    rng = np.random.default_rng(0)
+    losses = []
+    for i in range(60):
+        toks = rng.integers(0, cfg.vocab_size, (2, 4, 33))
+        toks[..., 1::2] = (toks[..., 0::2][..., : toks[..., 1::2].shape[-1]]
+                           + 1) % cfg.vocab_size
+        batch = {
+            "tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+            "labels": jnp.asarray(toks[..., 1:], jnp.int32),
+        }
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::10]
+    assert int(state.step) == 60
+
+
+def test_accum_equals_bigger_batch(key):
+    """grad accumulation over 2 microbatches == one batch of 2x (same data),
+    up to numerical noise."""
+    cfg, pcfg1, shape1 = _tiny_setup(accum=1)
+    pcfg2 = pcfg1.with_(grad_accum={"tiny": 2})
+    state0 = tr.init_train_state(cfg, pcfg1, key)
+
+    batch = _batch(cfg, 2, 2, 16)
+    merged = {k: v.reshape(1, 4, 16) for k, v in batch.items()}
+
+    s1, m1 = jax.jit(tr.make_train_step(cfg, pcfg1,
+                                        ShapeConfig("tiny", "train", 16, 4))
+                     )(state0, merged)
+    state0b = tr.init_train_state(cfg, pcfg1, key)
+    s2, m2 = jax.jit(tr.make_train_step(cfg, pcfg2,
+                                        ShapeConfig("tiny", "train", 16, 4))
+                     )(state0b, batch)
+    w1 = np.asarray(jax.tree_util.tree_leaves(s1.params)[0], np.float32)
+    w2 = np.asarray(jax.tree_util.tree_leaves(s2.params)[0], np.float32)
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+
+
+def _run_variant(key, pcfg, n_steps=45, lr=1e-2):
+    cfg, _, shape = _tiny_setup(accum=1)
+    state = tr.init_train_state(cfg, pcfg, key)
+    step = jax.jit(tr.make_train_step(cfg, pcfg, shape, base_lr=lr,
+                                      warmup=2, total_steps=n_steps + 5))
+    rng = np.random.default_rng(0)
+    losses = []
+    for i in range(n_steps):
+        toks = rng.integers(0, cfg.vocab_size, (1, 8, 33))
+        toks[..., 1::2] = (toks[..., 0::2][..., : toks[..., 1::2].shape[-1]]
+                           + 1) % cfg.vocab_size
+        batch = {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+                 "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    return state, losses
+
+
+def test_grad_compression_tracks_uncompressed(key):
+    """int8 grad compression w/ error feedback: must learn, and must track
+    the uncompressed run closely (the EF property)."""
+    cfg, pcfg, shape = _tiny_setup(accum=1)
+    _, base = _run_variant(key, pcfg)
+    state_c, comp = _run_variant(key, pcfg.with_(grad_compression=True))
+    assert state_c.err_buf is not None
+    assert base[-1] < base[0] - 0.2, base[::9]
+    assert comp[-1] < comp[0] - 0.2, comp[::9]
+    assert abs(comp[-1] - base[-1]) < 0.25, (base[-1], comp[-1])
+
+
+def test_int8_opt_state_tracks_fp32(key):
+    """int8 (sqrt-v) optimizer states track the fp32-state trajectory."""
+    cfg, pcfg, shape = _tiny_setup(accum=1)
+    _, fp32 = _run_variant(key, pcfg)
+    _, int8 = _run_variant(key, pcfg.with_(opt_state_dtype="int8"))
+    assert fp32[-1] < fp32[0] - 0.2, fp32[::9]
+    assert int8[-1] < int8[0] - 0.2, int8[::9]
+    assert abs(int8[-1] - fp32[-1]) < 0.25, (fp32[-1], int8[-1])
