@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
+from repro.utils import shard_map
 
 _BIG = jnp.int32(2**30)
 
@@ -41,10 +42,13 @@ def fixed_radius_nns(
     db_sigs: jax.Array,  # (n, words) uint32
     radius: int,
     max_candidates: int = 128,
+    db_mask: jax.Array | None = None,  # (n,) bool — rows eligible to match
 ) -> NNSResult:
     """All db items with hamming(query, item) <= radius (bounded, sorted)."""
     d = ops.hamming_distances(query_sigs, db_sigs)  # (q, n)
     within = d <= radius
+    if db_mask is not None:
+        within = jnp.logical_and(within, db_mask[None, :])
     counts = jnp.sum(within, axis=-1).astype(jnp.int32)
     masked = jnp.where(within, d, _BIG)
     # smallest distances first (threshold-match + priority encode)
@@ -67,21 +71,26 @@ def sharded_fixed_radius_nns(
     db_sigs: jax.Array,  # (n, words) row-sharded over `axis`
     radius: int,
     max_candidates: int = 128,
+    n_valid: int | None = None,  # rows >= n_valid are padding, never match
 ):
     """Fixed-radius NNS with the item DB sharded across the mesh.
 
     Each shard = one "bank" scanning its rows in parallel; per-shard bounded
     candidates (local priority encode) are all-gathered and re-selected.
-    Returned indices are global row ids.
+    Returned indices are global row ids. `n_valid` lets callers pad the DB
+    to a multiple of the shard count without the pad rows ever matching.
     """
     n = db_sigs.shape[0]
     n_shards = mesh.shape[axis]
     per_shard = n // n_shards
     local_k = min(max_candidates, per_shard)
+    n_valid = n if n_valid is None else n_valid
 
     def local_scan(q_local, db_local):
-        res = fixed_radius_nns(q_local, db_local, radius, local_k)
         shard = jax.lax.axis_index(axis)
+        row_ids = shard * per_shard + jnp.arange(per_shard)
+        res = fixed_radius_nns(q_local, db_local, radius, local_k,
+                               db_mask=row_ids < n_valid)
         gidx = jnp.where(
             res.indices >= 0, res.indices + shard * per_shard, -1
         )
@@ -97,7 +106,7 @@ def sharded_fixed_radius_nns(
 
     specs_in = (P(), P(axis, None))
     specs_out = NNSResult(indices=P(), distances=P(), counts=P())
-    fn = jax.shard_map(
+    fn = shard_map(
         local_scan, mesh=mesh, in_specs=specs_in, out_specs=specs_out,
         check_vma=False,
     )

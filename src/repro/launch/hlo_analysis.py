@@ -153,8 +153,12 @@ def _operand_names(line: str, op: str) -> list[str]:
     names = []
     for tok in out:
         tok = tok.strip()
-        if tok.startswith("%"):
-            names.append(tok[1:].split(" ")[0].split(")")[0])
+        # operands print either bare ("%name") or typed
+        # ("f32[128,256]{1,0} %name") depending on the HLO dumper version —
+        # the instruction name is the last %-token either way
+        refs = re.findall(r"%([\w\.\-]+)", tok)
+        if refs:
+            names.append(refs[-1])
     return names
 
 

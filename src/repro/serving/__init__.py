@@ -1,2 +1,36 @@
 """Serving: KV caches (bf16 / int8 — the paper's ET quantization applied to
-the per-session cache), prefill/decode steps, batched engines."""
+the per-session cache), prefill/decode steps, and the batched RecSys
+subsystem (micro-batching queue + hot-row cache + jitted serve step)."""
+from repro.serving.batcher import MicroBatcher, ServedQuery, default_buckets
+from repro.serving.hot_cache import (
+    CacheStats,
+    HotRowCache,
+    build_hot_cache,
+    cached_embedding_bag,
+    cached_lookup,
+)
+from repro.serving.recsys_engine import (
+    RecSysEngine,
+    ServeResult,
+    filter_step,
+    hit_rate,
+    rank_step,
+    serve_step,
+)
+
+__all__ = [
+    "CacheStats",
+    "HotRowCache",
+    "MicroBatcher",
+    "RecSysEngine",
+    "ServeResult",
+    "ServedQuery",
+    "build_hot_cache",
+    "cached_embedding_bag",
+    "cached_lookup",
+    "default_buckets",
+    "filter_step",
+    "hit_rate",
+    "rank_step",
+    "serve_step",
+]

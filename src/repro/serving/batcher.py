@@ -1,0 +1,145 @@
+"""Micro-batching request queue in front of the jitted iMARS serve step.
+
+Paper mapping (Fig. 3): each submitted query is one user hitting the
+recommendation fabric. The batcher plays the role of the query scheduler in
+front of the pipeline — it accumulates queries, pads/buckets them to a small
+set of fixed batch shapes, and feeds each bucket through **one** jitted
+`serve_step` whose stages are exactly the paper's computation flow:
+
+    queue  ->  (1a/1b*) UIET/ItET lookups + pooling   (hot-row cache + int8
+                        embedding_pool — CMA RAM mode, Sec. III-A1)
+           ->  (1b/1c)  filtering DNN -> user embedding u_i (crossbar MVMs)
+           ->  (1d)     fixed-radius Hamming NNS over ItET LSH signatures
+                        (TCAM threshold match, optionally bank-sharded over
+                        a device mesh)
+           ->  (2a-2d)  ranking DNN: CTR per candidate
+           ->  (2e)     CTR-buffer threshold top-k -> final items
+
+Bucketing keeps the set of compiled shapes tiny (powers of two up to
+`max_batch`): a bucket compiles once and is reused forever after, so the
+steady-state cost of a query is pure device compute. Padding replicates the
+last pending query and the padded rows are dropped before results are handed
+back — padding can never change a served result (tested).
+
+The hot-cache hit accumulator is donated to the jitted step (`serve_step`'s
+third argument), so the counters update in place across batches without a
+host round-trip per flush.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.serving.hot_cache import CacheStats
+from repro.serving.recsys_engine import RecSysEngine, serve_step
+
+
+def default_buckets(max_batch: int) -> tuple[int, ...]:
+    """Powers of two up to max_batch (always includes max_batch)."""
+    b, out = 1, []
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class ServedQuery:
+    items: np.ndarray  # (top_k,) recommended item ids, -1 padded
+    scores: np.ndarray  # (top_k,) CTR scores
+
+
+class MicroBatcher:
+    """Synchronous micro-batching queue over a `RecSysEngine`.
+
+    submit() enqueues single-user queries (dicts of scalars + the history
+    vector); flush() drains the queue through bucket-shaped jitted serve
+    steps; results() hands back per-ticket recommendations in submission
+    order. `serve_many` is the one-call convenience wrapper.
+    """
+
+    def __init__(self, engine: RecSysEngine, *, max_batch: int = 256,
+                 buckets: Sequence[int] | None = None):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.buckets = tuple(sorted(buckets or default_buckets(max_batch)))
+        assert self.buckets[-1] == max_batch, (self.buckets, max_batch)
+        self._feature_names = tuple(sorted(engine.cfg.user_features.keys()))
+        self._pending: list[tuple[int, dict]] = []
+        self._results: dict[int, ServedQuery] = {}
+        self._next_ticket = 0
+        # donated accumulator: hot-cache hits/lookups across every batch
+        self._stats = CacheStats.zero()
+        self.n_served = 0
+        self.n_padded = 0
+        self.n_batches = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, query: dict) -> int:
+        """Enqueue one user query; returns a ticket for `result()`."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, query))
+        return ticket
+
+    def result(self, ticket: int) -> ServedQuery:
+        if ticket not in self._results:
+            self.flush()
+        return self._results.pop(ticket)
+
+    def serve_many(self, queries: Sequence[dict]) -> list[ServedQuery]:
+        tickets = [self.submit(q) for q in queries]
+        self.flush()
+        return [self.result(t) for t in tickets]
+
+    # ------------------------------------------------------------------
+    def flush(self) -> None:
+        """Drain the queue through bucket-shaped jitted serve steps."""
+        while self._pending:
+            chunk = self._pending[: self.max_batch]
+            self._pending = self._pending[self.max_batch:]
+            bucket = next(b for b in self.buckets if b >= len(chunk))
+            batch = self._stack([q for _, q in chunk], bucket)
+            items, top, _, self._stats = serve_step(
+                self.engine, batch, self._stats)
+            items = np.asarray(items)
+            scores = np.asarray(top.scores)
+            for row, (ticket, _) in enumerate(chunk):
+                self._results[ticket] = ServedQuery(
+                    items=items[row], scores=scores[row])
+            self.n_served += len(chunk)
+            self.n_padded += bucket - len(chunk)
+            self.n_batches += 1
+
+    def _stack(self, queries: list[dict], bucket: int) -> dict:
+        """Stack per-user queries into one padded (bucket, ...) batch.
+
+        The `valid` row mask marks real queries: serve_step drops padding
+        rows' ids so they neither count as hot-cache lookups nor read rows.
+        """
+        n = len(queries)
+        queries = queries + [queries[-1]] * (bucket - n)  # replicate last
+        batch = {
+            name: np.asarray([q[name] for q in queries], np.int32)
+            for name in self._feature_names
+        }
+        batch["genre"] = np.asarray([q["genre"] for q in queries], np.int32)
+        batch["history"] = np.stack(
+            [np.asarray(q["history"], np.int32) for q in queries])
+        batch["valid"] = np.arange(bucket) < n
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+
+    # ------------------------------------------------------------------
+    @property
+    def cache_hit_rate(self) -> float:
+        """Measured hot-cache hit rate over everything served so far."""
+        return self._stats.hit_rate()
+
+    @property
+    def padding_fraction(self) -> float:
+        total = self.n_served + self.n_padded
+        return self.n_padded / total if total else 0.0

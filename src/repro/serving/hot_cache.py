@@ -1,0 +1,150 @@
+"""Frequency-based hot-row cache for quantized embedding tables.
+
+RecNMP and MicroRec both observe that embedding-table traffic under real
+recommendation workloads is heavily skewed: a tiny fraction of rows (popular
+items, frequent users) absorbs most lookups. iMARS keeps every ET row in the
+CMA fabric; the software image of the same locality win is a small cache of
+the hottest rows pinned *dense in f32* next to the compute, while cold rows
+take the int8 `embedding_pool` dequant-gather path.
+
+Design contract (tested in tests/test_batched_serving.py):
+
+  * the pinned f32 rows are bit-identical to `dequantize_rowwise` of the
+    backing int8 rows, so a cached lookup / pooled bag **bit-matches** the
+    uncached path — the cache is purely a bandwidth/latency optimisation and
+    can never change serving results;
+  * every cached op returns a `CacheStats` (hits, lookups) alongside its
+    value, so engines can surface measured hit rates per served batch.
+
+Membership is a binary search over the sorted hot-id set (`searchsorted`
+plus an equality probe) — O(log K) per id, branch-free, jit-friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import QuantizedTensor, dequantize_rowwise
+from repro.utils import pytree_dataclass
+
+
+class CacheStats(NamedTuple):
+    hits: jax.Array  # () int32 — ids served from the hot set
+    lookups: jax.Array  # () int32 — total valid (non-padding) ids
+
+    @staticmethod
+    def zero() -> "CacheStats":
+        return CacheStats(hits=jnp.int32(0), lookups=jnp.int32(0))
+
+    def __add__(self, other: "CacheStats") -> "CacheStats":
+        return CacheStats(hits=self.hits + other.hits,
+                          lookups=self.lookups + other.lookups)
+
+    def hit_rate(self) -> float:
+        lk = int(self.lookups)
+        return float(self.hits) / lk if lk else 0.0
+
+
+@pytree_dataclass(meta_fields=("capacity",))
+class HotRowCache:
+    """Top-K hot rows of one int8 table, pinned dense in f32.
+
+    `hot_ids` is sorted ascending; `hot_rows[i]` is the exact dequantized
+    image of table row `hot_ids[i]`.
+    """
+
+    hot_ids: jax.Array  # (K,) int32, sorted
+    hot_rows: jax.Array  # (K, d) f32
+    capacity: int = 0
+
+
+def build_hot_cache(table: QuantizedTensor, freqs=None,
+                    capacity: int = 256) -> HotRowCache:
+    """Pin the `capacity` most frequent rows of `table`.
+
+    freqs: (n_rows,) lookup counts (e.g. `np.bincount` over training
+    histories). None pins the lowest row ids — the right default for tables
+    whose ids are already popularity-ranked, and a deterministic fallback
+    otherwise.
+    """
+    n = int(table.values.shape[0])
+    capacity = min(int(capacity), n)
+    if capacity <= 0:
+        d = int(table.values.shape[1])
+        return HotRowCache(hot_ids=jnp.zeros((0,), jnp.int32),
+                           hot_rows=jnp.zeros((0, d), jnp.float32),
+                           capacity=0)
+    if freqs is None:
+        hot = np.arange(capacity, dtype=np.int32)
+    else:
+        freqs = np.asarray(freqs)
+        assert freqs.shape == (n,), (freqs.shape, n)
+        hot = np.sort(np.argpartition(-freqs, capacity - 1)[:capacity])
+        hot = hot.astype(np.int32)
+    hot_ids = jnp.asarray(hot)
+    hot_rows = dequantize_rowwise(
+        QuantizedTensor(values=table.values[hot_ids],
+                        scales=table.scales[hot_ids]))
+    return HotRowCache(hot_ids=hot_ids, hot_rows=hot_rows, capacity=capacity)
+
+
+def _probe(cache: HotRowCache, ids: jax.Array):
+    """ids (...,) -> (hit mask (...,), position into hot_rows (...,))."""
+    pos = jnp.searchsorted(cache.hot_ids, ids)
+    pos = jnp.clip(pos, 0, cache.capacity - 1)
+    hit = (cache.hot_ids[pos] == ids) & (ids >= 0)
+    return hit, pos
+
+
+def cached_rows(cache: HotRowCache | None, table: QuantizedTensor,
+                ids: jax.Array):
+    """Gather rows for `ids` (...,) -> ((..., d) f32, CacheStats).
+
+    Hot ids come from the pinned f32 rows; cold ids take the int8
+    dequant-gather path. -1 ids yield zero rows (as `embedding.lookup`).
+    """
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    cold = table.values[safe].astype(jnp.float32) * table.scales[safe]
+    if cache is None or cache.capacity == 0:
+        rows = jnp.where(valid[..., None], cold, 0.0)
+        return rows, CacheStats(
+            hits=jnp.int32(0),
+            lookups=jnp.sum(valid).astype(jnp.int32))
+    hit, pos = _probe(cache, ids)
+    rows = jnp.where(hit[..., None], cache.hot_rows[pos], cold)
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    return rows, CacheStats(hits=jnp.sum(hit).astype(jnp.int32),
+                            lookups=jnp.sum(valid).astype(jnp.int32))
+
+
+def cached_lookup(cache: HotRowCache | None, table: QuantizedTensor,
+                  ids: jax.Array):
+    """Drop-in for `core.embedding.lookup` returning (rows, CacheStats)."""
+    return cached_rows(cache, table, ids)
+
+
+def cached_embedding_bag(
+    cache: HotRowCache | None,
+    table: QuantizedTensor,
+    ids: jax.Array,  # (B, L) int32, -1 padded
+    weights: jax.Array | None = None,
+    mode: str = "sum",
+):
+    """Drop-in for `core.embedding.embedding_bag` -> ((B, d), CacheStats).
+
+    The pooling reduction is the same weighted contraction as the uncached
+    kernel reference, over rows sourced from the hot set or the int8 path —
+    identical inputs in identical order, so the result bit-matches.
+    """
+    valid = (ids >= 0).astype(jnp.float32)
+    w = valid if weights is None else weights.astype(jnp.float32) * valid
+    rows, stats = cached_rows(cache, table, ids)  # (B, L, d)
+    pooled = jnp.einsum("bld,bl->bd", rows, w)
+    if mode == "mean":
+        count = jnp.sum(valid, axis=-1, keepdims=True)
+        pooled = pooled / jnp.maximum(count, 1.0)
+    return pooled, stats

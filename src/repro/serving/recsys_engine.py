@@ -10,6 +10,21 @@ ItET rows, then per query:
   (2a-2d)  ranking: candidate embeddings + ranking UIETs -> CTR per item
   (2e)     CTR-buffer threshold top-k -> final items
 
+Serving architecture (this module + serving/batcher.py + serving/hot_cache.py):
+
+  * `RecSysEngine` is a **registered pytree** — all tables/params/signatures
+    are leaves, all scalar knobs (cfg, radius, k, mesh) are static metadata —
+    so the whole engine passes through `jax.jit` as a plain argument and
+    `serve_step` / `filter_step` / `rank_step` are jit-compiled pure
+    functions over it.
+  * UIET/ItET lookups go through a `HotRowCache` (RecNMP/MicroRec-style
+    top-K hot rows pinned dense f32; cold rows via the int8 `embedding_pool`
+    path); measured hit rates ride along in every serve result.
+  * The filtering NNS optionally shards `item_sigs` row-wise over a mesh
+    axis (`RecSysEngine.shard`): each device scans its bank and bounded
+    per-shard candidates are all-gathered + re-selected, the paper's
+    priority-encoder + RSC communication pattern.
+
 The engine also composes the hardware cost model per query so every served
 batch reports (latency_us, energy_uj) the iMARS fabric would have spent —
 the software pipeline and the analytic model stay in lockstep.
@@ -18,39 +33,74 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as cm
-from repro.core.embedding import embedding_bag, lookup
+from repro.core.embedding import embedding_bag
 from repro.core.lsh import lsh_signature, make_lsh_projections
-from repro.core.nns import NNSResult, fixed_radius_nns
+from repro.core.nns import (
+    NNSResult,
+    fixed_radius_nns,
+    sharded_fixed_radius_nns,
+)
 from repro.core.quantization import QuantizedTensor, quantize_rowwise
-from repro.core.topk import threshold_topk
+from repro.core.topk import TopKResult, threshold_topk
 from repro.models import recsys as rs
+from repro.serving.hot_cache import (
+    CacheStats,
+    HotRowCache,
+    build_hot_cache,
+    cached_embedding_bag,
+    cached_lookup,
+)
+from repro.utils import FrozenMapping, pytree_dataclass
 
 
-@dataclasses.dataclass
+class ServeResult(NamedTuple):
+    items: jax.Array  # (B, top_k) final item ids, -1 padded
+    topk: TopKResult  # per-candidate CTR top-k
+    nns: NNSResult  # filtering-stage candidates
+    cost: cm.OpCost  # hardware cost model for this query shape
+    stats: CacheStats  # hot-cache hits/lookups for this batch
+
+
+@pytree_dataclass(meta_fields=(
+    "cfg", "radius", "n_candidates", "top_k", "nns_mesh", "nns_axis"))
 class RecSysEngine:
-    cfg: rs.YoutubeDNNConfig
     tables_q: dict  # name -> QuantizedTensor (int8 UIETs)
     item_table_q: QuantizedTensor  # int8 ItET
     genre_table_q: QuantizedTensor
     item_sigs: jax.Array  # (n_items, 8) packed 256-bit LSH signatures
     params: dict  # trained MLP weights (crossbar stack)
     lsh_proj: jax.Array
-    radius: int
-    n_candidates: int
-    top_k: int
+    item_hot: HotRowCache  # hot ItET rows (history pooling + ranking)
+    uiet_hot: dict  # name -> HotRowCache for the user-feature ETs
+    cfg: rs.YoutubeDNNConfig = None
+    radius: int = 96
+    n_candidates: int = 50
+    top_k: int = 10
+    nns_mesh: jax.sharding.Mesh | None = None
+    nns_axis: str | None = None
 
     @staticmethod
     def build(params: dict, cfg: rs.YoutubeDNNConfig, *, lsh_bits: int = 256,
               radius: int = 96, n_candidates: int = 50, top_k: int = 10,
+              hot_rows: int = 0, item_freqs=None, uiet_freqs: dict | None = None,
               key=None) -> "RecSysEngine":
+        """Quantize a trained YoutubeDNN into a serving engine.
+
+        hot_rows: capacity of the per-table hot-row caches (0 disables).
+        item_freqs / uiet_freqs: lookup-frequency histograms (e.g. bincounts
+        over training histories) selecting which rows get pinned.
+        """
         key = jax.random.key(7) if key is None else key
+        # cfg is static jit metadata -> its feature map must be hashable
+        if not isinstance(cfg.user_features, FrozenMapping):
+            cfg = cfg._replace(user_features=FrozenMapping(cfg.user_features))
         tables_q = {k: quantize_rowwise(v) for k, v in params["tables"].items()}
         item_q = quantize_rowwise(params["item_table"])
         genre_q = quantize_rowwise(params["genre_table"])
@@ -59,62 +109,58 @@ class RecSysEngine:
         from repro.core.quantization import dequantize_rowwise
 
         sigs = lsh_signature(dequantize_rowwise(item_q), proj)
+        uiet_freqs = uiet_freqs or {}
+        item_hot = build_hot_cache(item_q, item_freqs, hot_rows)
+        uiet_hot = {name: build_hot_cache(tables_q[name],
+                                          uiet_freqs.get(name), hot_rows)
+                    for name in tables_q}
         return RecSysEngine(
             cfg=cfg, tables_q=tables_q, item_table_q=item_q,
             genre_table_q=genre_q, item_sigs=sigs, params=params,
-            lsh_proj=proj, radius=radius, n_candidates=n_candidates,
-            top_k=top_k)
+            lsh_proj=proj, item_hot=item_hot, uiet_hot=uiet_hot,
+            radius=radius, n_candidates=n_candidates, top_k=top_k)
+
+    def shard(self, mesh: jax.sharding.Mesh, axis: str) -> "RecSysEngine":
+        """Row-shard the filtering-stage signature DB over `mesh[axis]`.
+
+        Pads `item_sigs` to a multiple of the axis size (pad rows are
+        excluded from matching via `n_valid`), places it with a
+        NamedSharding, and switches `filter_step` to the shard_map NNS.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        n_shards = mesh.shape[axis]
+        n = self.item_sigs.shape[0]
+        pad = (-n) % n_shards
+        sigs = jnp.pad(self.item_sigs, ((0, pad), (0, 0)))
+        sigs = jax.device_put(sigs, NamedSharding(mesh, P(axis, None)))
+        kw = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        kw.update(item_sigs=sigs, nns_mesh=mesh, nns_axis=axis)
+        return RecSysEngine(**kw)
 
     # ------------------------------------------------------------------
-    # stages
+    # thin object API over the jitted pure functions below
     # ------------------------------------------------------------------
     def user_embedding(self, batch: dict) -> jax.Array:
         """(1a)-(1c): quantized lookups/pooling + filtering DNN."""
-        feats = []
-        for name in sorted(self.cfg.user_features.keys()):
-            ids = batch[name][:, None]
-            feats.append(embedding_bag(self.tables_q[name], ids))
-        pooled = embedding_bag(self.item_table_q, batch["history"],
-                               mode="mean")
-        feats.append(pooled)
-        x = jnp.concatenate(feats, axis=-1)
-        return rs._mlp_apply(self.params["filter_mlp"], x)
+        u, _, _ = _features(self, batch)
+        return u
 
     def filter_stage(self, batch: dict) -> NNSResult:
         """(1d): fixed-radius Hamming NNS -> candidate item ids."""
-        u = self.user_embedding(batch)
-        q_sigs = lsh_signature(u, self.lsh_proj)
-        return fixed_radius_nns(q_sigs, self.item_sigs, self.radius,
-                                self.n_candidates)
+        nns, _ = filter_step(self, batch)
+        return nns
 
-    def rank_stage(self, batch: dict, cand: jax.Array):
+    def rank_stage(self, batch: dict, cand: jax.Array) -> TopKResult:
         """(2a)-(2e): CTR per candidate + threshold top-k."""
-        safe = jnp.maximum(cand, 0)
-        items = lookup(self.item_table_q, safe)  # (B, N, d)
-        genre = embedding_bag(self.genre_table_q, batch["genre"][:, None])
-        pooled = embedding_bag(self.item_table_q, batch["history"],
-                               mode="mean")
-        u = self.user_embedding(batch)
-        B, N = cand.shape
-        ctx = jnp.concatenate([u, genre, pooled], axis=-1)
-        x = jnp.concatenate(
-            [jnp.broadcast_to(ctx[:, None], (B, N, ctx.shape[-1])), items],
-            axis=-1)
-        logits = rs._mlp_apply(self.params["rank_mlp"], x)[..., 0]
-        ctr = jax.nn.sigmoid(logits)
-        ctr = jnp.where(cand >= 0, ctr, -jnp.inf)  # mask padding candidates
-        return threshold_topk(ctr, threshold=0.0, k=self.top_k)
+        top, _ = rank_step(self, batch, cand)
+        return top
 
-    def serve(self, batch: dict):
-        """Full query pipeline; returns (top-k result, candidates, cost)."""
-        nns = self.filter_stage(batch)
-        top = self.rank_stage(batch, nns.indices)
-        final = jnp.where(top.indices >= 0,
-                          jnp.take_along_axis(
-                              nns.indices, jnp.maximum(top.indices, 0), 1),
-                          -1)
-        cost = self.query_cost()
-        return final, top, nns, cost
+    def serve(self, batch: dict) -> ServeResult:
+        """Full query pipeline; jitted; returns ServeResult."""
+        items, top, nns, stats = serve_step(self, batch, CacheStats.zero())
+        return ServeResult(items=items, topk=top, nns=nns,
+                           cost=self.query_cost(), stats=stats)
 
     # ------------------------------------------------------------------
     # hardware cost accounting (per query)
@@ -125,6 +171,106 @@ class RecSysEngine:
                          energy_pj=e2e["imars_energy_uj"] * 1e6)
 
 
+# ---------------------------------------------------------------------------
+# jit-compiled pure stages over the engine pytree
+# ---------------------------------------------------------------------------
+def _features(engine: RecSysEngine, batch: dict):
+    """Cached lookups + filtering DNN -> (u, pooled_history, CacheStats).
+
+    `batch["valid"]` (optional, (B,) bool) marks real rows; padding rows'
+    ids are dropped to -1 so they never count as cache lookups (and read
+    zero rows, which the caller discards anyway).
+    """
+    valid = batch.get("valid")
+
+    def mask(ids):
+        if valid is None:
+            return ids
+        return jnp.where(valid[:, None], ids, -1)
+
+    stats = CacheStats.zero()
+    feats = []
+    for name in sorted(engine.cfg.user_features.keys()):
+        emb, st = cached_embedding_bag(
+            engine.uiet_hot.get(name), engine.tables_q[name],
+            mask(batch[name][:, None]))
+        feats.append(emb)
+        stats = stats + st
+    pooled, st = cached_embedding_bag(
+        engine.item_hot, engine.item_table_q, mask(batch["history"]),
+        mode="mean")
+    stats = stats + st
+    feats.append(pooled)
+    x = jnp.concatenate(feats, axis=-1)
+    u = rs._mlp_apply(engine.params["filter_mlp"], x)
+    return u, pooled, stats
+
+
+def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
+    if engine.nns_mesh is not None:
+        return sharded_fixed_radius_nns(
+            engine.nns_mesh, engine.nns_axis, q_sigs, engine.item_sigs,
+            engine.radius, engine.n_candidates,
+            n_valid=engine.item_table_q.shape[0])
+    return fixed_radius_nns(q_sigs, engine.item_sigs, engine.radius,
+                            engine.n_candidates)
+
+
+def _filter_step(engine: RecSysEngine, batch: dict):
+    u, _, stats = _features(engine, batch)
+    q_sigs = lsh_signature(u, engine.lsh_proj)
+    return _nns(engine, q_sigs), stats
+
+
+def _rank(engine: RecSysEngine, batch: dict, cand: jax.Array,
+          u: jax.Array, pooled: jax.Array):
+    """CTR + threshold top-k given precomputed user features."""
+    valid = batch.get("valid")
+    if valid is not None:  # padding rows: no candidate lookups, no stats
+        cand = jnp.where(valid[:, None], cand, -1)
+    # -1 candidates read zero rows and don't count as lookups; their CTR
+    # is masked to -inf below either way
+    items, st = cached_lookup(engine.item_hot, engine.item_table_q, cand)
+    genre = embedding_bag(engine.genre_table_q, batch["genre"][:, None])
+    B, N = cand.shape
+    ctx = jnp.concatenate([u, genre, pooled], axis=-1)
+    x = jnp.concatenate(
+        [jnp.broadcast_to(ctx[:, None], (B, N, ctx.shape[-1])), items],
+        axis=-1)
+    logits = rs._mlp_apply(engine.params["rank_mlp"], x)[..., 0]
+    ctr = jax.nn.sigmoid(logits)
+    ctr = jnp.where(cand >= 0, ctr, -jnp.inf)  # mask padding candidates
+    return threshold_topk(ctr, threshold=0.0, k=engine.top_k), st
+
+
+def _rank_step(engine: RecSysEngine, batch: dict, cand: jax.Array):
+    u, pooled, stats = _features(engine, batch)
+    top, st = _rank(engine, batch, cand, u, pooled)
+    return top, stats + st
+
+
+def _serve_step(engine: RecSysEngine, batch: dict, stats: CacheStats):
+    """One fused serving step: features -> NNS -> rank -> final ids.
+
+    `stats` is a running hot-cache hit accumulator; callers jit this with
+    the accumulator donated so it updates in place across batches.
+    """
+    u, pooled, st = _features(engine, batch)
+    q_sigs = lsh_signature(u, engine.lsh_proj)
+    nns = _nns(engine, q_sigs)
+    top, st2 = _rank(engine, batch, nns.indices, u, pooled)
+    final = jnp.where(top.indices >= 0,
+                      jnp.take_along_axis(
+                          nns.indices, jnp.maximum(top.indices, 0), 1),
+                      -1)
+    return final, top, nns, stats + st + st2
+
+
+filter_step = jax.jit(_filter_step)
+rank_step = jax.jit(_rank_step)
+serve_step = jax.jit(_serve_step, donate_argnums=(2,))
+
+
 def hit_rate(engine: RecSysEngine, data, batch_size: int = 256,
              k: int = 10, mode: str = "lsh", max_users: int | None = None
              ) -> float:
@@ -133,31 +279,43 @@ def hit_rate(engine: RecSysEngine, data, batch_size: int = 256,
     mode: "fp32" (cosine, fp32 tables), "int8" (cosine over dequantized
     int8), "lsh" (the iMARS fixed-radius Hamming path) — the three accuracy
     configurations of paper Sec. IV-B.
-    """
-    from repro.core.nns import cosine_topk
-    from repro.core.quantization import dequantize_rowwise
 
+    Evaluation runs through the batched serving path: users are chunked into
+    fixed `batch_size` device batches (last chunk padded, results masked) and
+    each chunk goes through one jitted retrieval step.
+    """
     n = data.n_users if max_users is None else min(max_users, data.n_users)
     hits = 0
     for lo in range(0, n, batch_size):
-        idx = np.arange(lo, min(lo + batch_size, n))
+        hi = min(lo + batch_size, n)
+        idx = np.arange(lo, hi)
+        # pad to the fixed batch shape so the jitted step compiles once
+        pad_idx = np.concatenate(
+            [idx, np.full(batch_size - idx.size, idx[-1], idx.dtype)])
         batch = {
-            **{k2: jnp.asarray(v[idx]) for k2, v in data.user_feats.items()},
-            "history": jnp.asarray(data.histories[idx]),
-            "genre": jnp.asarray(data.genres[idx]),
+            **{k2: jnp.asarray(v[pad_idx]) for k2, v in data.user_feats.items()},
+            "history": jnp.asarray(data.histories[pad_idx]),
+            "genre": jnp.asarray(data.genres[pad_idx]),
         }
-        if mode == "fp32":
-            u = rs.user_tower(engine.params, engine.cfg, batch)
-            _, top = cosine_topk(u, engine.params["item_table"], k)
-            got = np.asarray(top)
-        elif mode == "int8":
-            u = engine.user_embedding(batch)
-            _, top = cosine_topk(
-                u, dequantize_rowwise(engine.item_table_q), k)
-            got = np.asarray(top)
-        else:  # lsh
-            nns = engine.filter_stage(batch)
-            got = np.asarray(nns.indices[:, :k])
+        got = np.asarray(_hr_step(engine, batch, mode, k))[: idx.size]
         labels = data.test_labels[idx]
         hits += int((got == labels[:, None]).any(axis=1).sum())
     return hits / n
+
+
+@partial(jax.jit, static_argnames=("mode", "k"))
+def _hr_step(engine: RecSysEngine, batch: dict, mode: str, k: int):
+    """Top-k retrieved item ids (B, k) for one padded batch."""
+    from repro.core.nns import cosine_topk
+    from repro.core.quantization import dequantize_rowwise
+
+    if mode == "fp32":
+        u = rs.user_tower(engine.params, engine.cfg, batch)
+        _, top = cosine_topk(u, engine.params["item_table"], k)
+        return top
+    if mode == "int8":
+        u, _, _ = _features(engine, batch)
+        _, top = cosine_topk(u, dequantize_rowwise(engine.item_table_q), k)
+        return top
+    nns, _ = _filter_step(engine, batch)
+    return nns.indices[:, :k]

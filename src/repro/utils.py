@@ -3,10 +3,57 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
+from typing import Any, Iterator, Mapping
 
 import jax
 import jax.numpy as jnp
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` across jax versions.
+
+    Newer jax exposes `jax.shard_map(..., check_vma=...)`; older releases
+    only have `jax.experimental.shard_map.shard_map(..., check_rep=...)`.
+    Every call site in this repo goes through here so the codebase runs on
+    both.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+class FrozenMapping(Mapping):
+    """Immutable, hashable mapping — a dict that can live in a static
+    (metadata) field of a jit-traced pytree."""
+
+    __slots__ = ("_d",)
+
+    def __init__(self, d: Mapping):
+        object.__setattr__(self, "_d", dict(d))
+
+    def __getitem__(self, k):
+        return self._d[k]
+
+    def __iter__(self) -> Iterator:
+        return iter(self._d)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __hash__(self) -> int:
+        return hash(tuple(sorted(self._d.items())))
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, (FrozenMapping, Mapping)):
+            return dict(self._d) == dict(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"FrozenMapping({self._d!r})"
 
 
 def pytree_dataclass(cls=None, *, meta_fields: tuple = ()):

@@ -4,6 +4,9 @@ Run: XLA flags set below; prints MARKER lines the test asserts on."""
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# fake CPU devices only ever make sense on the CPU backend — and with
+# libtpu installed a bare env would try (and block on) TPU plugin init
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import sys
 

@@ -28,12 +28,17 @@ def _run_helper(arch, mesh="single", timeout=420):
         [sys.executable, str(HELPER), arch, mesh],
         capture_output=True, text=True, timeout=timeout,
         cwd="/root/repo", env={"PYTHONPATH": "src", "HOME": "/root",
-                               "PATH": "/usr/local/bin:/usr/bin:/bin"},
+                               "PATH": "/usr/local/bin:/usr/bin:/bin",
+                               # a bare env must still pin the CPU backend:
+                               # with libtpu installed, TPU plugin init
+                               # blocks forever on /tmp/libtpu_lockfile
+                               "JAX_PLATFORMS": "cpu"},
     )
     assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-3000:]
     return out.stdout
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "phi3.5-moe-42b-a6.6b",
                                   "mamba2-1.3b", "zamba2-1.2b",
                                   "musicgen-large"])
@@ -44,6 +49,7 @@ def test_mini_dryrun_single(arch):
     assert "MARKER decode ok" in out
 
 
+@pytest.mark.slow
 def test_mini_dryrun_multi_pod():
     out = _run_helper("qwen2.5-3b", "multi")
     assert "MARKER decode ok" in out

@@ -11,6 +11,7 @@ from repro.core.embedding import (
 )
 from repro.core.hierarchy import hierarchical_psum, sharded_embedding_bag, tree_sum
 from repro.kernels.ref import embedding_pool_ref
+from repro.utils import shard_map
 
 
 def test_lookup_matches_dense(key):
@@ -67,7 +68,7 @@ def test_hierarchical_psum_single_device(key):
     def f(x):
         return hierarchical_psum(x, ("model",))
 
-    y = jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+    y = shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
                       out_specs=jax.sharding.PartitionSpec(), check_vma=False)(
         jnp.ones((4,))
     )

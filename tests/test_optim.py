@@ -9,6 +9,7 @@ from repro.optim.compression import (
     compressed_psum,
     init_error_buffer,
 )
+from repro.utils import shard_map
 
 
 def _rosenbrock_ish(params):
@@ -75,7 +76,7 @@ def test_compressed_psum_single_device(key):
     def f(a):
         return compressed_psum(a, "data")
 
-    y = jax.shard_map(f, mesh=mesh,
+    y = shard_map(f, mesh=mesh,
                       in_specs=jax.sharding.PartitionSpec(),
                       out_specs=jax.sharding.PartitionSpec(),
                       check_vma=False)(x)

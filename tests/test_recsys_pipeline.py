@@ -28,7 +28,9 @@ def _adam_fit(params, loss_fn, batches, lr=3e-3):
 
 @pytest.fixture(scope="module")
 def small_data():
-    return synthetic.make_movielens(n_users=400, n_items=300, history_len=8)
+    # 600 items keeps chance-level HR@10 (k/n_items) well below what the
+    # trained tower reaches, so the accuracy-ordering assertions have margin
+    return synthetic.make_movielens(n_users=400, n_items=600, history_len=8)
 
 
 @pytest.fixture(scope="module")
@@ -72,18 +74,24 @@ def test_engine_serves_and_costs(trained, small_data):
         "history": jnp.asarray(data.histories[idx]),
         "genre": jnp.asarray(data.genres[idx]),
     }
-    final, top, nns, cost = engine.serve(batch)
-    assert final.shape == (8, 5)
+    res = engine.serve(batch)
+    assert res.items.shape == (8, 5)
     # returned ids are valid or -1
-    arr = np.asarray(final)
+    arr = np.asarray(res.items)
     assert ((arr >= -1) & (arr < data.n_items)).all()
+    # hot-cache counters ride along in the serve result
+    assert int(res.stats.lookups) > 0
+    assert 0.0 <= res.stats.hit_rate() <= 1.0
     # the hardware cost model rides along (N_candidates=20 here)
     from repro.core import cost_model as cm
     want = cm.end_to_end_movielens(n_candidates=20)
-    assert cost.latency_us == pytest.approx(want["imars_latency_us"], rel=1e-6)
-    assert cost.energy_uj == pytest.approx(want["imars_energy_uj"], rel=1e-6)
+    assert res.cost.latency_us == pytest.approx(
+        want["imars_latency_us"], rel=1e-6)
+    assert res.cost.energy_uj == pytest.approx(
+        want["imars_energy_uj"], rel=1e-6)
 
 
+@pytest.mark.slow
 def test_accuracy_ordering_fp32_int8_lsh(trained, small_data):
     """Paper Sec. IV-B: HR(fp32-cos) >= HR(int8-cos) > HR(lsh) and the int8
     drop is small; all three far above chance."""
