@@ -1,0 +1,36 @@
+"""Machine-readable benchmark artifacts.
+
+Every benchmark module keeps its human CSV on stdout and additionally writes
+``BENCH_<name>.json`` (to $BENCH_OUT_DIR, default CWD) so the perf trajectory
+across PRs can be diffed by tooling instead of parsed out of logs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+
+
+def write_bench_json(name: str, rows: list[dict], **extra) -> str:
+    """Write BENCH_<name>.json with `rows` + host metadata; returns the path."""
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "bench": name,
+        "unix_time": int(time.time()),
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version()},
+        "rows": rows,
+        **extra,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def csv_rows_to_json(rows: list[tuple]) -> list[dict]:
+    """Adapt the (name, us_per_call, derived) CSV tuples to JSON dicts."""
+    return [{"name": n, "us_per_call": us, "derived": d} for n, us, d in rows]

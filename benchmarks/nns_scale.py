@@ -1,0 +1,184 @@
+"""Filtering-stage scaling: dense vs streaming fixed-radius NNS.
+
+The iMARS filtering stage scans the *entire* item signature bank per query.
+The dense software path materializes a (q, n) int32 distance matrix — at the
+million-item north star that is gigabytes per batch and the capacity wall of
+the pipeline. The streaming path (`scan_block`) holds O(q * max_candidates)
+instead. This benchmark sweeps catalog size and records, per path:
+
+  * queries/sec through the jitted `fixed_radius_nns`
+  * peak incremental RSS during the scan (compile + steady state)
+  * a bit-match check of streaming vs dense where both run
+
+Each (size, path) cell runs in a *fresh subprocess* so `ru_maxrss` deltas
+are real per-cell peaks, not shadows of an earlier phase's high-water mark
+(the dense top-k at 65k items already pushes ~0.5 GiB of sort workspace).
+Dense is skipped (OOM guard) once its distance matrix alone would exceed
+DENSE_MAX_BYTES; the streaming path must hold >= 1M items on CPU with peak
+incremental memory under 10% of the dense matrix it replaces.
+
+  PYTHONPATH=src python -m benchmarks.nns_scale [--full]
+
+Emits BENCH_nns_scale.json (see benchmarks/bench_io.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+SIZES = (65_536, 262_144, 1_048_576)
+FULL_SIZES = SIZES + (4_194_304,)
+Q = 128  # concurrent queries per scan (one serving micro-batch)
+WORDS = 8  # 256-bit signatures
+RADIUS = 96
+MAX_CANDIDATES = 128
+SCAN_BLOCK = 4096
+DENSE_MAX_BYTES = 1 << 28  # skip dense when (q, n) int32 alone exceeds 256 MiB
+REPS = 2
+
+
+def _cell(n: int, path: str) -> dict:
+    """One measurement in this process: build arrays, scan, report JSON."""
+    import gc
+    import resource
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.nns import fixed_radius_nns
+
+    rng = np.random.default_rng(0)
+    queries = jnp.asarray(
+        rng.integers(0, 2**32, size=(Q, WORDS), dtype=np.uint32))
+    db = jnp.asarray(
+        rng.integers(0, 2**32, size=(n, WORDS), dtype=np.uint32))
+    jax.block_until_ready(db)
+    scan_block = SCAN_BLOCK if path == "streaming" else 0
+
+    def fn(q):
+        return fixed_radius_nns(q, db, RADIUS, MAX_CANDIDATES,
+                                scan_block=scan_block)
+
+    gc.collect()
+    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+    t0 = time.perf_counter()
+    res = fn(queries)
+    jax.block_until_ready(res)  # compile + first scan
+    t1 = time.perf_counter()
+    for _ in range(REPS):
+        res = fn(queries)
+    jax.block_until_ready(res)
+    steady = (time.perf_counter() - t1) / REPS
+    rss_delta = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024 - rss0
+
+    row = {"n": n, "q": Q, "path": path, "status": "ok",
+           "qps": Q / steady, "us_per_query": 1e6 * steady / Q,
+           "compile_and_first_s": t1 - t0,
+           "rss_peak_delta_bytes": int(rss_delta),
+           "dense_matrix_bytes": Q * n * 4,
+           "scan_block": scan_block}
+    if path == "streaming":
+        row["mem_lt_10pct_dense"] = bool(rss_delta < 0.1 * Q * n * 4)
+    else:
+        # bit-match check on a query slice while the db is resident
+        d = fixed_radius_nns(queries[:8], db, RADIUS, MAX_CANDIDATES,
+                             scan_block=0)
+        s = fixed_radius_nns(queries[:8], db, RADIUS, MAX_CANDIDATES,
+                             scan_block=SCAN_BLOCK)
+        row["bitmatch_streaming"] = all(
+            bool(jnp.array_equal(a, b)) for a, b in zip(d, s))
+    return row
+
+
+def _spawn_cell(n: int, path: str) -> dict:
+    """Run one cell in a fresh interpreter; returns its JSON row.
+
+    A crashed cell (e.g. the dense path OOM-killed on a small host — the
+    failure mode this benchmark probes) is reported as a status=failed row
+    with its stderr tail, so the sweep continues and still emits the
+    artifact."""
+    env = dict(os.environ)
+    # the bare container env hangs on TPU plugin init; pin the parent backend
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.nns_scale",
+         "--cell", str(n), path],
+        env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        tail = proc.stderr.strip().splitlines()[-3:]
+        print(f"# cell n={n} path={path} failed "
+              f"(rc={proc.returncode}): {' | '.join(tail)}", file=sys.stderr)
+        return {"n": n, "q": Q, "path": path, "status": "failed",
+                "returncode": proc.returncode,
+                "stderr_tail": tail, "dense_matrix_bytes": Q * n * 4}
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def rows(sizes=SIZES):
+    out, json_rows = [], []
+    for n in sizes:
+        row = _spawn_cell(n, "streaming")
+        json_rows.append(row)
+        if row["status"] != "ok":
+            out.append((f"nns_scale/streaming/n{n}", 0.0, "status=failed"))
+        else:
+            out.append((
+                f"nns_scale/streaming/n{n}", row["us_per_query"],
+                f"qps={row['qps']:.1f};"
+                f"rss_delta={row['rss_peak_delta_bytes']};"
+                f"dense_bytes={row['dense_matrix_bytes']};"
+                f"mem_lt_10pct_dense={row['mem_lt_10pct_dense']}",
+            ))
+        if Q * n * 4 <= DENSE_MAX_BYTES:
+            row = _spawn_cell(n, "dense")
+            json_rows.append(row)
+            if row["status"] != "ok":
+                out.append((f"nns_scale/dense/n{n}", 0.0, "status=failed"))
+            else:
+                out.append((
+                    f"nns_scale/dense/n{n}", row["us_per_query"],
+                    f"qps={row['qps']:.1f};"
+                    f"rss_delta={row['rss_peak_delta_bytes']};"
+                    f"bitmatch={row['bitmatch_streaming']}",
+                ))
+        else:
+            json_rows.append({"n": n, "q": Q, "path": "dense",
+                              "status": "skipped_oom_guard",
+                              "dense_matrix_bytes": Q * n * 4})
+            out.append((
+                f"nns_scale/dense/n{n}", 0.0,
+                f"status=skipped_oom_guard;dense_bytes={Q * n * 4}"))
+    return out, json_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="extend the sweep to 4M items")
+    ap.add_argument("--cell", nargs=2, metavar=("N", "PATH"),
+                    help="internal: run one measurement and print JSON")
+    args = ap.parse_args()
+    if args.cell:
+        print(json.dumps(_cell(int(args.cell[0]), args.cell[1])))
+        return
+
+    from benchmarks.bench_io import write_bench_json
+
+    out, json_rows = rows(FULL_SIZES if args.full else SIZES)
+    for name, us, derived in out:
+        print(f"{name},{us:.3f},{derived}")
+    path = write_bench_json(
+        "nns_scale", json_rows,
+        config={"radius": RADIUS, "max_candidates": MAX_CANDIDATES,
+                "words": WORDS, "scan_block": SCAN_BLOCK, "q": Q,
+                "dense_max_bytes": DENSE_MAX_BYTES, "reps": REPS})
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

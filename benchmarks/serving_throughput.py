@@ -11,6 +11,8 @@ measures both on the actual jitted pipeline of this host:
     skewed synthetic MovieLens item popularity.
 
   PYTHONPATH=src python -m benchmarks.serving_throughput
+
+Emits BENCH_serving_throughput.json (see benchmarks/bench_io.py).
 """
 import time
 
@@ -92,8 +94,15 @@ def rows():
 
 
 def main():
-    for name, us, derived in rows():
+    from benchmarks.bench_io import csv_rows_to_json, write_bench_json
+
+    out = rows()
+    for name, us, derived in out:
         print(f"{name},{us:.6f},{derived}")
+    path = write_bench_json(
+        "serving_throughput", csv_rows_to_json(out),
+        config={"batch_sizes": BATCH_SIZES, "cache_sizes": CACHE_SIZES})
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -3,13 +3,26 @@
 The paper replaces cosine top-k with *fixed-radius* Hamming NNS over 256-bit
 LSH signatures (TCAM threshold match). We implement:
 
-  * `fixed_radius_nns`       — single-device: distances via the Hamming kernel,
-                               threshold mask, candidate selection (bounded).
+  * `fixed_radius_nns`       — single-device, two execution plans behind one
+                               `scan_block` knob:
+                                 dense     — (q, n) distance matrix via the
+                                             Hamming kernel + threshold +
+                                             top-k (fast for small DBs);
+                                 streaming — fused blocked scan through
+                                             `ops.streaming_nns`, O(q * K)
+                                             memory for million-item catalogs.
+                               `scan_block=None` routes automatically by DB
+                               size (`STREAM_MIN_ITEMS`), `scan_block=0`
+                               forces dense, any positive value forces
+                               streaming with that chunk size. Both plans are
+                               bit-identical.
   * `sharded_fixed_radius_nns` — the item database row-sharded over a mesh
                                axis: each shard scans locally (the "CMA bank")
-                               and contributes a count-bounded candidate
-                               buffer that is all-gathered — the communication
-                               pattern of the paper's priority encoder + RSC.
+                               — streaming *within* the shard composes with
+                               sharding *across* devices — and contributes a
+                               count-bounded candidate buffer that is
+                               all-gathered: the communication pattern of the
+                               paper's priority encoder + RSC.
   * cosine references        — the paper's accuracy-baseline configs
                                (fp32/int8 cosine top-k).
 
@@ -26,9 +39,18 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
+from repro.kernels.streaming_nns import BIG_DIST, max_streamable_items
 from repro.utils import shard_map
 
-_BIG = jnp.int32(2**30)
+# invalid-slot distance sentinel (single definition in
+# kernels/streaming_nns.py), exported for tests
+BIG = jnp.int32(BIG_DIST)
+_BIG = BIG  # backwards-compatible alias
+
+# dense materializes q*n int32 — above this DB size the O(q*K) streaming
+# scan wins by default (a 256-query batch at 2**18 items is already 256 MiB)
+STREAM_MIN_ITEMS = 1 << 18
+DEFAULT_SCAN_BLOCK = 4096
 
 
 class NNSResult(NamedTuple):
@@ -43,24 +65,50 @@ def fixed_radius_nns(
     radius: int,
     max_candidates: int = 128,
     db_mask: jax.Array | None = None,  # (n,) bool — rows eligible to match
+    *,
+    scan_block: int | None = None,  # None=auto, 0=dense, >0=streaming chunk
+    n_valid: jax.Array | int | None = None,  # rows >= n_valid never match
 ) -> NNSResult:
     """All db items with hamming(query, item) <= radius (bounded, sorted)."""
+    n, words = db_sigs.shape
+    if scan_block is None:
+        use_stream = (db_mask is None and n >= STREAM_MIN_ITEMS
+                      and n <= max_streamable_items(words))
+        block = DEFAULT_SCAN_BLOCK
+    elif scan_block == 0:
+        use_stream = False
+    else:
+        if db_mask is not None:
+            raise ValueError(
+                "streaming NNS supports prefix masking via n_valid, "
+                "not an arbitrary db_mask")
+        use_stream, block = True, scan_block
+
+    if use_stream:
+        indices, distances, counts = ops.streaming_nns(
+            query_sigs, db_sigs, radius=radius,
+            max_candidates=max_candidates, scan_block=block, n_valid=n_valid)
+        return NNSResult(indices=indices, distances=distances, counts=counts)
+
     d = ops.hamming_distances(query_sigs, db_sigs)  # (q, n)
     within = d <= radius
+    if n_valid is not None:
+        within = jnp.logical_and(
+            within, (jnp.arange(n) < n_valid)[None, :])
     if db_mask is not None:
         within = jnp.logical_and(within, db_mask[None, :])
     counts = jnp.sum(within, axis=-1).astype(jnp.int32)
-    masked = jnp.where(within, d, _BIG)
+    masked = jnp.where(within, d, BIG)
     # smallest distances first (threshold-match + priority encode)
     neg_top, idx = jax.lax.top_k(-masked, k=min(max_candidates, d.shape[-1]))
     dist = -neg_top
-    valid = dist < _BIG
+    valid = dist < BIG
     idx = jnp.where(valid, idx, -1)
-    dist = jnp.where(valid, dist, _BIG)
+    dist = jnp.where(valid, dist, BIG)
     if idx.shape[-1] < max_candidates:  # tiny db: pad out
         pad = max_candidates - idx.shape[-1]
         idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
-        dist = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=2**30)
+        dist = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=int(BIG))
     return NNSResult(indices=idx, distances=dist, counts=counts)
 
 
@@ -72,13 +120,18 @@ def sharded_fixed_radius_nns(
     radius: int,
     max_candidates: int = 128,
     n_valid: int | None = None,  # rows >= n_valid are padding, never match
+    *,
+    scan_block: int | None = None,  # forwarded to the per-shard scan
 ):
     """Fixed-radius NNS with the item DB sharded across the mesh.
 
     Each shard = one "bank" scanning its rows in parallel; per-shard bounded
     candidates (local priority encode) are all-gathered and re-selected.
-    Returned indices are global row ids. `n_valid` lets callers pad the DB
-    to a multiple of the shard count without the pad rows ever matching.
+    Within a shard the scan routes dense vs streaming via `scan_block`
+    exactly like `fixed_radius_nns`, so sharding-over-devices composes with
+    streaming-within-shard. Returned indices are global row ids. `n_valid`
+    lets callers pad the DB to a multiple of the shard count without the pad
+    rows ever matching.
     """
     n = db_sigs.shape[0]
     n_shards = mesh.shape[axis]
@@ -88,9 +141,10 @@ def sharded_fixed_radius_nns(
 
     def local_scan(q_local, db_local):
         shard = jax.lax.axis_index(axis)
-        row_ids = shard * per_shard + jnp.arange(per_shard)
+        # prefix count of real (non-padding) rows within this shard
+        local_valid = jnp.clip(n_valid - shard * per_shard, 0, per_shard)
         res = fixed_radius_nns(q_local, db_local, radius, local_k,
-                               db_mask=row_ids < n_valid)
+                               scan_block=scan_block, n_valid=local_valid)
         gidx = jnp.where(
             res.indices >= 0, res.indices + shard * per_shard, -1
         )
@@ -101,7 +155,7 @@ def sharded_fixed_radius_nns(
         neg_top, pos = jax.lax.top_k(-all_dist, k=max_candidates)
         dist = -neg_top
         idx = jnp.take_along_axis(all_idx, pos, axis=1)
-        idx = jnp.where(dist < _BIG, idx, -1)
+        idx = jnp.where(dist < BIG, idx, -1)
         return NNSResult(indices=idx, distances=dist, counts=counts)
 
     specs_in = (P(), P(axis, None))

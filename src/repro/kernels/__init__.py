@@ -2,7 +2,8 @@
 
 Layout (per the kernel contract):
   <name>.py  - pl.pallas_call + explicit BlockSpec VMEM tiling
-  ops.py     - jit'd wrappers with TPU/interpret/ref dispatch
+  ops.py     - kernel backend registry + jit'd public wrappers
+               (pallas/interpret/ref dispatch, per-op env overrides)
   ref.py     - pure-jnp oracles (ground truth for allclose tests)
 """
 from repro.kernels import ops, ref  # noqa: F401

@@ -1,14 +1,30 @@
-"""jit'd public wrappers with backend dispatch for every kernel.
+"""jit'd public wrappers with a kernel backend registry.
 
-On TPU the Pallas kernels run compiled (interpret=False); on CPU (this
-container) `REPRO_PALLAS=interpret` runs them through the Pallas interpreter
-for correctness, and the default is the pure-jnp reference (fast to compile,
-same numerics) — model code always calls through here and never cares.
+Every kernel is registered once via `register_kernel(name, ref=..., pallas=...)`
+and all public ops share one dispatch path instead of copy-pasted mode
+branches. Three backends per op:
+
+  * ``pallas``    — compiled Pallas kernel (the TPU fast path)
+  * ``interpret`` — the same kernel through the Pallas interpreter
+                    (CPU correctness checks of the real kernel code)
+  * ``ref``       — the pure-jnp oracle in kernels/ref.py (fast to compile,
+                    same numerics; the default CPU execution path)
+
+Mode resolution, most-specific first:
+
+  1. ``REPRO_PALLAS_<OP>`` — per-op override, e.g.
+     ``REPRO_PALLAS_STREAMING_NNS=interpret`` or
+     ``REPRO_PALLAS_HAMMING_DISTANCES=ref``
+  2. ``REPRO_PALLAS`` — global override (``pallas`` | ``interpret`` | ``ref``)
+  3. auto: ``pallas`` on TPU backends, ``ref`` everywhere else
+
+Model code always calls the public wrappers below and never cares which
+backend ran. Ops with no Pallas implementation fall back to their ref.
 """
 from __future__ import annotations
 
 import os
-from functools import partial
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -18,21 +34,67 @@ from repro.kernels.embedding_pool import embedding_pool_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hamming_nns import hamming_distances_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.streaming_nns import streaming_nns_pallas
+from repro.utils import round_up
+
+_MODES = ("pallas", "interpret", "ref")
 
 
-def _mode() -> str:
-    """'pallas' | 'interpret' | 'ref'."""
-    env = os.environ.get("REPRO_PALLAS", "auto")
-    if env in ("pallas", "interpret", "ref"):
-        return env
+class KernelOp(NamedTuple):
+    ref: Callable
+    pallas: Callable | None  # called with an extra interpret= kwarg
+
+
+_REGISTRY: dict[str, KernelOp] = {}
+
+
+def register_kernel(name: str, *, ref: Callable,
+                    pallas: Callable | None = None) -> None:
+    """Register one kernel's backends under `name` (see module docstring)."""
+    if name in _REGISTRY:
+        raise ValueError(f"kernel {name!r} already registered")
+    _REGISTRY[name] = KernelOp(ref=ref, pallas=pallas)
+
+
+def registered_kernels() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def kernel_mode(name: str) -> str:
+    """'pallas' | 'interpret' | 'ref' for op `name` (env overrides, then auto)."""
+    for env in (f"REPRO_PALLAS_{name.upper()}", "REPRO_PALLAS"):
+        value = os.environ.get(env, "")
+        if value in _MODES:
+            return value
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def embedding_pool(table_values, table_scales, ids, weights=None):
-    """Fused int8 dequant-gather-pool: (n,d) int8 table, (B,L) ids -> (B,d)."""
-    mode = _mode()
-    if mode == "ref":
-        return ref.embedding_pool_ref(table_values, table_scales, ids, weights)
+def dispatch(name: str, *args, **kwargs):
+    """Route one op call to its registered backend for the current mode."""
+    op = _REGISTRY[name]
+    mode = kernel_mode(name)
+    if mode == "ref" or op.pallas is None:
+        return op.ref(*args, **kwargs)
+    return op.pallas(*args, interpret=(mode == "interpret"), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# per-op pallas adapters (block sizing + input massaging live here)
+# ---------------------------------------------------------------------------
+def _hamming_block_n(n: int) -> int:
+    """DB-block rows: 1024 cap, 128-lane aligned, never rounded past the
+    128-aligned row count (n=300 used to get a 512 block via next-pow2)."""
+    return min(1024, max(128, round_up(n, 128)))
+
+
+def _hamming_pallas(queries, db, *, interpret):
+    return hamming_distances_pallas(
+        queries, db, block_n=_hamming_block_n(db.shape[0]),
+        interpret=interpret)
+
+
+def _embedding_pool_pallas(table_values, table_scales, ids, weights=None, *,
+                           interpret):
     d = table_values.shape[1]
     block_d = d if d <= 512 else 512
     if d % block_d != 0:
@@ -40,49 +102,90 @@ def embedding_pool(table_values, table_scales, ids, weights=None):
     valid = (ids >= 0).astype(jnp.float32)
     w = valid if weights is None else weights.astype(jnp.float32) * valid
     return embedding_pool_pallas(
-        table_values,
-        table_scales,
-        ids,
-        w,
-        block_d=block_d,
-        interpret=(mode == "interpret"),
-    )
+        table_values, table_scales, ids, w, block_d=block_d,
+        interpret=interpret)
 
 
-def hamming_distances(queries, db):
-    """(q,w) x (n,w) packed uint32 signatures -> (q,n) int32 distances."""
-    mode = _mode()
-    if mode == "ref":
-        return ref.hamming_distance_ref(queries, db)
-    n = db.shape[0]
-    block_n = 1024 if n >= 1024 else max(128, 1 << (n - 1).bit_length())
-    return hamming_distances_pallas(
-        queries, db, block_n=block_n, interpret=(mode == "interpret")
-    )
-
-
-def int8_matmul(x, w, x_scale, w_scale):
-    """int8 (m,k) @ int8 (k,n) with per-row/col f32 scales -> f32 (m,n)."""
-    mode = _mode()
-    if mode == "ref":
-        return ref.int8_matmul_ref(x, w, x_scale, w_scale)
-    return int8_matmul_pallas(
-        x, w, x_scale, w_scale, interpret=(mode == "interpret")
-    )
-
-
-def flash_attention(q, k, v, *, causal=True, scale=None):
-    """(b,h,s,d) attention; flash kernel on TPU, blocked ref elsewhere."""
-    mode = _mode()
-    if mode == "ref":
-        return ref.blocked_attention_ref(q, k, v, causal=causal, scale=scale)
+def _flash_attention_pallas(q, k, v, *, causal=True, scale=None, interpret):
     b, h, sq, d = q.shape
     out = flash_attention_pallas(
         q.reshape(b * h, sq, d),
         k.reshape(b * h, k.shape[2], d),
         v.reshape(b * h, v.shape[2], d),
-        causal=causal,
-        scale=scale,
-        interpret=(mode == "interpret"),
-    )
+        causal=causal, scale=scale, interpret=interpret)
     return out.reshape(b, h, sq, d)
+
+
+def _streaming_nns_ref(queries, db, *, radius, max_candidates, scan_block,
+                       n_valid):
+    return ref.streaming_nns_ref(
+        queries, db, radius, max_candidates, scan_block=scan_block,
+        n_valid=n_valid)
+
+
+# the kernel's rank-select merge materializes an (block_q, m, m) compare with
+# m = block_n + padded-K; 512 rows keeps that ~13 MiB — inside VMEM. The
+# `scan_block` knob sizes the *ref* lax.scan chunk; the pallas tile is
+# derived independently (128-lane aligned, capped) so any host-side chunk —
+# huge or oddly-sized — maps to a viable on-chip merge tile. Results are
+# block-size invariant, so the remap never changes output.
+_STREAM_PALLAS_MAX_BLOCK_N = 512
+
+
+def _streaming_nns_pallas(queries, db, *, radius, max_candidates, scan_block,
+                          n_valid, interpret):
+    limit = db.shape[0] if n_valid is None else n_valid
+    block_n = min(max(128, round_up(scan_block, 128)),
+                  _STREAM_PALLAS_MAX_BLOCK_N)
+    return streaming_nns_pallas(
+        queries, db, jnp.asarray(limit, jnp.int32), radius=radius,
+        max_candidates=max_candidates, block_n=block_n,
+        interpret=interpret)
+
+
+register_kernel("hamming_distances", ref=ref.hamming_distance_ref,
+                pallas=_hamming_pallas)
+register_kernel("embedding_pool", ref=ref.embedding_pool_ref,
+                pallas=_embedding_pool_pallas)
+register_kernel("int8_matmul", ref=ref.int8_matmul_ref,
+                pallas=int8_matmul_pallas)
+register_kernel("flash_attention", ref=ref.blocked_attention_ref,
+                pallas=_flash_attention_pallas)
+register_kernel("streaming_nns", ref=_streaming_nns_ref,
+                pallas=_streaming_nns_pallas)
+
+
+# ---------------------------------------------------------------------------
+# public ops
+# ---------------------------------------------------------------------------
+def embedding_pool(table_values, table_scales, ids, weights=None):
+    """Fused int8 dequant-gather-pool: (n,d) int8 table, (B,L) ids -> (B,d)."""
+    return dispatch("embedding_pool", table_values, table_scales, ids, weights)
+
+
+def hamming_distances(queries, db):
+    """(q,w) x (n,w) packed uint32 signatures -> (q,n) int32 distances."""
+    return dispatch("hamming_distances", queries, db)
+
+
+def streaming_nns(queries, db, *, radius, max_candidates,
+                  scan_block=4096, n_valid=None):
+    """Streaming fixed-radius NNS over the full DB, O(q*max_candidates) mem.
+
+    Returns (indices, distances, counts) bit-matching the dense
+    hamming_distances -> threshold -> top_k path; `n_valid` (dynamic ok)
+    masks trailing padding rows, `scan_block` sets the scan chunk size.
+    """
+    return dispatch("streaming_nns", queries, db, radius=radius,
+                    max_candidates=max_candidates, scan_block=scan_block,
+                    n_valid=n_valid)
+
+
+def int8_matmul(x, w, x_scale, w_scale):
+    """int8 (m,k) @ int8 (k,n) with per-row/col f32 scales -> f32 (m,n)."""
+    return dispatch("int8_matmul", x, w, x_scale, w_scale)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None):
+    """(b,h,s,d) attention; flash kernel on TPU, blocked ref elsewhere."""
+    return dispatch("flash_attention", q, k, v, causal=causal, scale=scale)

@@ -13,6 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.streaming_nns import BIG_DIST, big_key, key_shift
+
 
 # ---------------------------------------------------------------------------
 # Embedding pool (iMARS CMA RAM-mode lookup + in-memory adder pooling)
@@ -39,6 +41,66 @@ def hamming_distance_ref(queries: jax.Array, db: jax.Array) -> jax.Array:
     """queries (q, w) uint32, db (n, w) uint32 -> (q, n) int32 distances."""
     x = jnp.bitwise_xor(queries[:, None, :], db[None, :, :])
     return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Streaming fixed-radius NNS (iMARS TCAM search + priority encoder, fused)
+# ---------------------------------------------------------------------------
+def streaming_nns_ref(
+    queries: jax.Array,  # (q, w) uint32
+    db: jax.Array,  # (n, w) uint32
+    radius: int,
+    max_candidates: int,
+    *,
+    scan_block: int = 4096,
+    n_valid: jax.Array | int | None = None,
+):
+    """`lax.scan`-chunked streaming NNS oracle, O(q * max_candidates) memory.
+
+    Bit-matches the dense path (hamming_distance_ref -> threshold -> top_k):
+    returns (indices, distances, counts) with the `max_candidates` nearest
+    matches per query sorted by (distance, index), padded with (-1, 2**30).
+    Candidates are tracked as packed int32 keys `dist << shift | row` (see
+    kernels/streaming_nns.py for the encoding) so one top_k per chunk merges
+    the running buffer with the chunk's matches exactly.
+    """
+    q, words = queries.shape
+    n = db.shape[0]
+    shift = key_shift(words)  # the one key encoding, shared with the kernel
+    big = big_key(words)
+    if n > (1 << shift):
+        raise ValueError(
+            f"db rows {n} exceed streaming key capacity {1 << shift} at "
+            f"words={words}; shard the db first")
+
+    n_blocks = -(-n // scan_block)
+    pad = n_blocks * scan_block - n
+    db_p = jnp.pad(db, ((0, pad), (0, 0))) if pad else db
+    blocks = db_p.reshape(n_blocks, scan_block, words)
+    limit = jnp.minimum(
+        jnp.asarray(n if n_valid is None else n_valid, jnp.int32), n)
+
+    def step(carry, blk):
+        keys, counts = carry
+        db_blk, j = blk
+        d = hamming_distance_ref(queries, db_blk)  # (q, scan_block)
+        gidx = j * scan_block + jnp.arange(scan_block, dtype=jnp.int32)
+        within = jnp.logical_and(d <= radius, (gidx < limit)[None, :])
+        counts = counts + jnp.sum(within, axis=-1).astype(jnp.int32)
+        new_keys = jnp.where(within, d * (1 << shift) + gidx[None, :], big)
+        merged = jnp.concatenate([keys, new_keys], axis=1)
+        neg_top, _ = jax.lax.top_k(-merged, max_candidates)
+        return (-neg_top, counts), None
+
+    keys0 = jnp.full((q, max_candidates), big, jnp.int32)
+    counts0 = jnp.zeros((q,), jnp.int32)
+    (keys, counts), _ = jax.lax.scan(
+        step, (keys0, counts0),
+        (blocks, jnp.arange(n_blocks, dtype=jnp.int32)))
+    valid = keys < big
+    indices = jnp.where(valid, keys & ((1 << shift) - 1), -1)
+    distances = jnp.where(valid, keys >> shift, jnp.int32(BIG_DIST))
+    return indices, distances, counts
 
 
 # ---------------------------------------------------------------------------

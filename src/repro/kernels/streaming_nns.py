@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: streaming fused Hamming fixed-radius NNS.
+
+The dense filtering path (`ops.hamming_distances` -> threshold -> top-k)
+materializes the whole (q, n) int32 distance matrix, which is the capacity
+wall of the pipeline at million-item catalogs. This kernel is the streaming
+image of the iMARS TCAM search + priority encoder (Sec. III-A/B): one blocked
+scan over the signature DB that fuses
+
+  (1) XOR-popcount distance over packed uint32 signature lanes,
+  (2) the fixed-radius threshold compare (matchline),
+  (3) bounded candidate selection (priority encode) into a running
+      per-query buffer of the `max_candidates` best matches,
+
+so peak memory is O(q * max_candidates) regardless of DB size.
+
+Candidate bookkeeping packs (distance, db_row) into one int32 sort key,
+``key = dist << shift | row`` with ``shift = 31 - bitlen(32 * words + 1)``
+(256-bit signatures -> 9 distance bits, 22 row bits, DBs up to 4.19M rows).
+Ascending key order is exactly the dense path's (distance, index) order —
+`jax.lax.top_k` breaks ties by lower index — so the streaming result is
+bit-identical to the dense `fixed_radius_nns` output.
+
+The per-block merge keeps the buffer sorted: concatenate the resident buffer
+with the block's candidate keys, compute each element's rank with one
+all-pairs compare (rank = #strictly-smaller keys; valid keys are unique so
+ranks are collision-free), and scatter rank < K survivors back via a
+min-reduction over a one-hot slot mask — all elementwise/reduce ops that
+Mosaic lowers without needing an in-kernel sort. Blocks with no matches (the
+common case at selective radii) skip the merge entirely under `pl.when`.
+
+Grid: (q_blocks, n_blocks) with the DB dimension innermost and *sequential*
+— the (block_q, K) output tile is revisited across the scan and stays
+resident in VMEM, the same accumulator pattern as the embedding-pool kernel.
+`n_valid` rides along as a dynamic (1, 1) scalar operand so the sharded path
+can mask per-shard padding rows with a traced value.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import cdiv, round_up
+
+# THE invalid-slot distance sentinel: core/nns.py (dense padding) and
+# kernels/ref.py (oracle decode) both import it, so the bit-match invariant
+# between every path hangs off this one definition.
+BIG_DIST = 2**30
+
+
+def key_shift(words: int) -> int:
+    """Bits reserved for the db row index in the packed (dist, row) key."""
+    return 31 - (32 * words + 1).bit_length()
+
+
+def big_key(words: int) -> int:
+    """Sentinel key strictly greater than every valid (dist, row) key."""
+    return (32 * words + 1) << key_shift(words)
+
+
+def max_streamable_items(words: int) -> int:
+    """Largest DB the packed int32 key can index (4.19M rows at words=8)."""
+    return 1 << key_shift(words)
+
+
+def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
+                          *, radius, shift, big):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        keys_ref[...] = jnp.full(keys_ref.shape, big, jnp.int32)
+        counts_ref[...] = jnp.zeros(counts_ref.shape, jnp.int32)
+
+    q = q_ref[...]  # (block_q, words) uint32
+    db = db_ref[...]  # (block_n, words) uint32
+    block_n = db.shape[0]
+    x = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
+    d = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    gidx = j * block_n + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    within = jnp.logical_and(d <= radius, gidx < limit_ref[0, 0])
+    counts_ref[...] += jnp.sum(within.astype(jnp.int32), axis=1, keepdims=True)
+
+    @pl.when(jnp.any(within))
+    def _merge():
+        new_keys = jnp.where(within, d * (1 << shift) + gidx, big)
+        merged = jnp.concatenate([keys_ref[...], new_keys], axis=1)  # (bq, m)
+        rank = jnp.sum(
+            (merged[:, None, :] < merged[:, :, None]).astype(jnp.int32),
+            axis=-1,
+        )  # (bq, m): unique for valid keys, >= K only for sentinels beyond K
+        n_slots = keys_ref.shape[1]
+        slot = jax.lax.broadcasted_iota(
+            jnp.int32, (*merged.shape, n_slots), 2)
+        take = jnp.logical_and(rank[..., None] == slot,
+                               (merged < big)[..., None])
+        keys_ref[...] = jnp.min(
+            jnp.where(take, merged[..., None], big), axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("radius", "max_candidates", "block_q", "block_n",
+                     "interpret"),
+)
+def streaming_nns_pallas(
+    queries: jax.Array,  # (q, words) uint32
+    db: jax.Array,  # (n, words) uint32
+    n_valid: jax.Array,  # () int32 — rows >= n_valid never match (dynamic)
+    *,
+    radius: int,
+    max_candidates: int,
+    block_q: int = 8,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Streaming fixed-radius NNS -> (indices, distances, counts).
+
+    Bit-matches the dense hamming->threshold->top_k path: indices/distances
+    are the `max_candidates` nearest matches sorted by (distance, index),
+    padded with (-1, BIG_DIST); counts are total matches within radius.
+    """
+    q, words = queries.shape
+    n, words2 = db.shape
+    assert words == words2, (words, words2)
+    shift = key_shift(words)
+    if n > (1 << shift):
+        raise ValueError(
+            f"db rows {n} exceed streaming key capacity {1 << shift} at "
+            f"words={words}; shard the db first")
+
+    # the resident buffer is lane-padded; extra slots decode to padding
+    k_pad = max(128, round_up(max_candidates, 128))
+    qp = round_up(q, block_q)
+    np_ = round_up(n, block_n)
+    queries_p = jnp.pad(queries, ((0, qp - q), (0, 0))) if qp > q else queries
+    db_p = jnp.pad(db, ((0, np_ - n), (0, 0))) if np_ > n else db
+    limit = jnp.reshape(
+        jnp.minimum(jnp.asarray(n_valid, jnp.int32), n), (1, 1))
+
+    kernel = functools.partial(
+        _streaming_nns_kernel, radius=radius, shift=shift,
+        big=big_key(words))
+    keys, counts = pl.pallas_call(
+        kernel,
+        grid=(qp // block_q, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_q, words), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, words), lambda i, j: (j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qp, k_pad), jnp.int32),
+            jax.ShapeDtypeStruct((qp, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(limit, queries_p, db_p)
+
+    keys = keys[:q, :max_candidates]  # buffer is sorted: first K = best K
+    valid = keys < big_key(words)
+    indices = jnp.where(valid, keys & ((1 << shift) - 1), -1)
+    distances = jnp.where(valid, keys >> shift, BIG_DIST)
+    return indices, distances, counts[:q, 0]

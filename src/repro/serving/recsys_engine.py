@@ -69,7 +69,8 @@ class ServeResult(NamedTuple):
 
 
 @pytree_dataclass(meta_fields=(
-    "cfg", "radius", "n_candidates", "top_k", "nns_mesh", "nns_axis"))
+    "cfg", "radius", "n_candidates", "top_k", "nns_mesh", "nns_axis",
+    "scan_block"))
 class RecSysEngine:
     tables_q: dict  # name -> QuantizedTensor (int8 UIETs)
     item_table_q: QuantizedTensor  # int8 ItET
@@ -85,17 +86,21 @@ class RecSysEngine:
     top_k: int = 10
     nns_mesh: jax.sharding.Mesh | None = None
     nns_axis: str | None = None
+    scan_block: int | None = None  # filtering NNS: None=auto, 0=dense, >0=chunk
 
     @staticmethod
     def build(params: dict, cfg: rs.YoutubeDNNConfig, *, lsh_bits: int = 256,
               radius: int = 96, n_candidates: int = 50, top_k: int = 10,
               hot_rows: int = 0, item_freqs=None, uiet_freqs: dict | None = None,
-              key=None) -> "RecSysEngine":
+              scan_block: int | None = None, key=None) -> "RecSysEngine":
         """Quantize a trained YoutubeDNN into a serving engine.
 
         hot_rows: capacity of the per-table hot-row caches (0 disables).
         item_freqs / uiet_freqs: lookup-frequency histograms (e.g. bincounts
         over training histories) selecting which rows get pinned.
+        scan_block: filtering-stage NNS execution plan — None routes dense vs
+        streaming automatically by catalog size, 0 forces the dense (q, n)
+        path, a positive value forces the streaming scan with that chunk.
         """
         key = jax.random.key(7) if key is None else key
         # cfg is static jit metadata -> its feature map must be hashable
@@ -118,7 +123,8 @@ class RecSysEngine:
             cfg=cfg, tables_q=tables_q, item_table_q=item_q,
             genre_table_q=genre_q, item_sigs=sigs, params=params,
             lsh_proj=proj, item_hot=item_hot, uiet_hot=uiet_hot,
-            radius=radius, n_candidates=n_candidates, top_k=top_k)
+            radius=radius, n_candidates=n_candidates, top_k=top_k,
+            scan_block=scan_block)
 
     def shard(self, mesh: jax.sharding.Mesh, axis: str) -> "RecSysEngine":
         """Row-shard the filtering-stage signature DB over `mesh[axis]`.
@@ -211,9 +217,11 @@ def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
         return sharded_fixed_radius_nns(
             engine.nns_mesh, engine.nns_axis, q_sigs, engine.item_sigs,
             engine.radius, engine.n_candidates,
-            n_valid=engine.item_table_q.shape[0])
+            n_valid=engine.item_table_q.shape[0],
+            scan_block=engine.scan_block)
     return fixed_radius_nns(q_sigs, engine.item_sigs, engine.radius,
-                            engine.n_candidates)
+                            engine.n_candidates,
+                            scan_block=engine.scan_block)
 
 
 def _filter_step(engine: RecSysEngine, batch: dict):

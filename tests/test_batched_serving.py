@@ -180,6 +180,28 @@ def test_sharded_engine_matches_local(served):
                                   np.asarray(dist.nns.counts))
 
 
+def test_engine_scan_block_serves_identically(served):
+    """The streaming filtering plan is a pure execution knob: forcing it on
+    the engine (locally and sharded) must not change a single served item."""
+    import dataclasses
+
+    engine, data = served
+    batch = _batch(data, np.arange(6))
+    base = engine.serve(batch)
+    for eng in (
+        dataclasses.replace(engine, scan_block=16),
+        dataclasses.replace(engine.shard(jax.make_mesh((1,), ("model",)),
+                                         "model"), scan_block=8),
+    ):
+        got = eng.serve(batch)
+        np.testing.assert_array_equal(np.asarray(base.items),
+                                      np.asarray(got.items))
+        np.testing.assert_array_equal(np.asarray(base.nns.indices),
+                                      np.asarray(got.nns.indices))
+        np.testing.assert_array_equal(np.asarray(base.nns.counts),
+                                      np.asarray(got.nns.counts))
+
+
 def test_sharded_nns_with_padding_excludes_pad_rows(key):
     """n not divisible by shards: pad rows must never appear as candidates."""
     from repro.core.lsh import lsh_signature, make_lsh_projections

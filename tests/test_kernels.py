@@ -6,11 +6,19 @@ import numpy as np
 import pytest
 
 from repro.core.quantization import quantize_rowwise
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.embedding_pool import embedding_pool_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hamming_nns import hamming_distances_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.streaming_nns import streaming_nns_pallas
+
+
+def _sig_pair(key, q, n, words):
+    kq, kd = jax.random.split(key)
+    queries = jax.random.randint(kq, (q, words), 0, 2**31 - 1).astype(jnp.uint32)
+    db = jax.random.randint(kd, (n, words), 0, 2**31 - 1).astype(jnp.uint32)
+    return queries, db
 
 
 # ---------------------------------------------------------------------------
@@ -18,11 +26,105 @@ from repro.kernels.int8_matmul import int8_matmul_pallas
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("q,n,words", [(1, 16, 8), (8, 100, 8), (5, 1025, 4), (3, 2048, 1)])
 def test_hamming_kernel_vs_ref(key, q, n, words):
-    kq, kd = jax.random.split(key)
-    queries = jax.random.randint(kq, (q, words), 0, 2**31 - 1).astype(jnp.uint32)
-    db = jax.random.randint(kd, (n, words), 0, 2**31 - 1).astype(jnp.uint32)
+    queries, db = _sig_pair(key, q, n, words)
     want = ref.hamming_distance_ref(queries, db)
     got = hamming_distances_pallas(queries, db, block_q=4, block_n=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hamming_block_sizing_never_rounds_past_lane_padding(key):
+    """Regression: n=300 used to get a 512 block via next-pow2 rounding;
+    the block must stay within the 128-lane-aligned row count."""
+    assert ops._hamming_block_n(300) == 384
+    assert ops._hamming_block_n(100) == 128
+    assert ops._hamming_block_n(1) == 128
+    assert ops._hamming_block_n(5000) == 1024
+    for n in (1, 100, 130, 300, 1023):
+        block = ops._hamming_block_n(n)
+        assert block % 128 == 0
+        assert block - n < 128 or n < 128  # never a whole wasted lane-row
+    # and the sized interpret path still matches the oracle at n=300
+    queries, db = _sig_pair(key, 3, 300, 8)
+    want = ref.hamming_distance_ref(queries, db)
+    got = hamming_distances_pallas(
+        queries, db, block_n=ops._hamming_block_n(300), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# streaming_nns
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q,n,words,radius,K,block_n", [
+    (3, 100, 8, 110, 8, 32),    # matches overflow the buffer
+    (5, 1000, 4, 60, 16, 128),  # multi-block, ~40% match rate
+    (2, 257, 1, 12, 300, 64),   # K > n, blocks don't divide n
+    (4, 37, 8, 128, 12, 7),     # db smaller than one lane row
+    (1, 64, 8, 0, 4, 64),       # radius 0: only exact duplicates
+])
+def test_streaming_nns_kernel_vs_ref(key, q, n, words, radius, K, block_n):
+    """Pallas interpret path == lax.scan oracle, bit-exact, all fields."""
+    queries, db = _sig_pair(key, q, n, words)
+    want = ref.streaming_nns_ref(queries, db, radius, K, scan_block=block_n)
+    got = streaming_nns_pallas(
+        queries, db, jnp.int32(n), radius=radius, max_candidates=K,
+        block_q=4, block_n=block_n, interpret=True)
+    for g, w, name in zip(got, want, ("indices", "distances", "counts")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+def test_streaming_nns_kernel_n_valid_masks_tail(key):
+    """Dynamic n_valid: rows >= n_valid never match, in kernel and oracle."""
+    queries, db = _sig_pair(key, 2, 96, 2)
+    want = ref.streaming_nns_ref(queries, db, 40, 10, scan_block=32,
+                                 n_valid=61)
+    got = streaming_nns_pallas(
+        queries, db, jnp.int32(61), radius=40, max_candidates=10,
+        block_n=32, interpret=True)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert (np.asarray(got[0]) < 61).all()
+
+
+def test_streaming_nns_capacity_guard():
+    """DBs beyond the packed-key index capacity are rejected loudly."""
+    from repro.kernels.streaming_nns import max_streamable_items
+
+    assert max_streamable_items(8) == 1 << 22  # 256-bit sigs: 4.19M rows
+    with pytest.raises(ValueError, match="capacity"):
+        jax.eval_shape(
+            lambda q, d: ref.streaming_nns_ref(q, d, 10, 4),
+            jax.ShapeDtypeStruct((1, 8), jnp.uint32),
+            jax.ShapeDtypeStruct(((1 << 22) + 1, 8), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# ops registry dispatch
+# ---------------------------------------------------------------------------
+def test_registry_contents_and_modes(monkeypatch):
+    assert set(ops.registered_kernels()) >= {
+        "hamming_distances", "embedding_pool", "int8_matmul",
+        "flash_attention", "streaming_nns"}
+    monkeypatch.setenv("REPRO_PALLAS", "ref")
+    monkeypatch.setenv("REPRO_PALLAS_HAMMING_DISTANCES", "interpret")
+    assert ops.kernel_mode("hamming_distances") == "interpret"
+    assert ops.kernel_mode("int8_matmul") == "ref"
+    monkeypatch.delenv("REPRO_PALLAS")
+    monkeypatch.setenv("REPRO_PALLAS_HAMMING_DISTANCES", "bogus")
+    assert ops.kernel_mode("hamming_distances") in ("pallas", "ref")  # auto
+
+
+def test_registry_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        ops.register_kernel("hamming_distances", ref=lambda: None)
+
+
+def test_per_op_interpret_override_dispatches_pallas(key, monkeypatch):
+    """REPRO_PALLAS_<OP>=interpret runs the real kernel via the interpreter
+    and must agree with the ref path bit-for-bit."""
+    queries, db = _sig_pair(key, 4, 300, 8)
+    want = ops.hamming_distances(queries, db)  # default CPU mode: ref
+    monkeypatch.setenv("REPRO_PALLAS_HAMMING_DISTANCES", "interpret")
+    got = ops.hamming_distances(queries, db)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

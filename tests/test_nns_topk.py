@@ -1,9 +1,16 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import nns
 from repro.core.lsh import lsh_signature, make_lsh_projections
-from repro.core.nns import cosine_topk, fixed_radius_nns, sharded_fixed_radius_nns
+from repro.core.nns import (
+    BIG,
+    cosine_topk,
+    fixed_radius_nns,
+    sharded_fixed_radius_nns,
+)
 from repro.core.topk import threshold_topk
 
 
@@ -11,6 +18,13 @@ def _sigs(key, n, dim=16, n_bits=128):
     proj = make_lsh_projections(key, dim, n_bits)
     x = jax.random.normal(jax.random.key(7), (n, dim))
     return x, lsh_signature(x, proj)
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_array_equal(
+        np.asarray(a.distances), np.asarray(b.distances))
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
 
 
 def test_fixed_radius_exact_semantics(key):
@@ -42,6 +56,70 @@ def test_fixed_radius_self_match(key):
     assert (np.asarray(res.distances[:, 0]) == 0).all()
 
 
+def test_big_sentinel_exported_and_used(key):
+    """Invalid candidate slots carry the one exported BIG sentinel."""
+    _, sigs = _sigs(key, 20)
+    res = fixed_radius_nns(sigs[:2], sigs, radius=0, max_candidates=8)
+    invalid = np.asarray(res.indices) < 0
+    assert invalid.any()
+    assert (np.asarray(res.distances)[invalid] == int(BIG)).all()
+    assert int(BIG) == 2**30 and nns._BIG is BIG  # backwards alias
+
+
+@pytest.mark.parametrize("scan_block", [7, 64, 100, 512])
+def test_streaming_matches_dense(key, scan_block):
+    """Any scan_block (dividing n or not, larger than n or not) must return
+    the identical NNSResult to the dense (q, n) path."""
+    _, sigs = _sigs(key, 300)
+    q = sigs[:5]
+    dense = fixed_radius_nns(q, sigs, radius=30, max_candidates=24,
+                             scan_block=0)
+    stream = fixed_radius_nns(q, sigs, radius=30, max_candidates=24,
+                              scan_block=scan_block)
+    _assert_same_result(dense, stream)
+
+
+def test_streaming_matches_dense_with_n_valid(key):
+    _, sigs = _sigs(key, 128)
+    dense = fixed_radius_nns(sigs[:3], sigs, radius=28, max_candidates=16,
+                             scan_block=0, n_valid=77)
+    stream = fixed_radius_nns(sigs[:3], sigs, radius=28, max_candidates=16,
+                              scan_block=32, n_valid=77)
+    _assert_same_result(dense, stream)
+    assert (np.asarray(stream.indices) < 77).all()
+
+
+def test_auto_routing_by_db_size(key, monkeypatch):
+    """scan_block=None picks dense below STREAM_MIN_ITEMS and streaming at or
+    above it — verified by spying on the streaming op — and both plans
+    agree."""
+    from repro.kernels import ops
+
+    calls = []
+    real = ops.streaming_nns
+    monkeypatch.setattr(
+        ops, "streaming_nns",
+        lambda *a, **kw: calls.append(kw) or real(*a, **kw))
+
+    _, sigs = _sigs(key, 200)
+    q = sigs[:3]
+    dense = fixed_radius_nns(q, sigs, radius=30, max_candidates=16)
+    assert not calls  # 200 < STREAM_MIN_ITEMS: dense plan
+    monkeypatch.setattr(nns, "STREAM_MIN_ITEMS", 64)
+    monkeypatch.setattr(nns, "DEFAULT_SCAN_BLOCK", 96)
+    auto = fixed_radius_nns(q, sigs, radius=30, max_candidates=16)
+    assert len(calls) == 1 and calls[0]["scan_block"] == 96
+    _assert_same_result(dense, auto)
+
+
+def test_streaming_rejects_arbitrary_db_mask(key):
+    _, sigs = _sigs(key, 64)
+    mask = jnp.arange(64) % 2 == 0
+    with pytest.raises(ValueError, match="n_valid"):
+        fixed_radius_nns(sigs[:1], sigs, radius=30, max_candidates=4,
+                         db_mask=mask, scan_block=16)
+
+
 def test_sharded_matches_unsharded(key):
     """1-device mesh: the sharded path must equal the local path exactly."""
     mesh = jax.make_mesh((1,), ("model",))
@@ -54,6 +132,18 @@ def test_sharded_matches_unsharded(key):
     np.testing.assert_array_equal(
         np.sort(np.asarray(local.indices), -1), np.sort(np.asarray(shard.indices), -1)
     )
+
+
+def test_sharded_composes_with_streaming(key):
+    """Sharding over devices + streaming within the shard == dense local."""
+    mesh = jax.make_mesh((1,), ("model",))
+    _, sigs = _sigs(key, 96)
+    q = sigs[:3]
+    local = fixed_radius_nns(q, sigs, radius=25, max_candidates=16,
+                             scan_block=0)
+    shard = sharded_fixed_radius_nns(mesh, "model", q, sigs, radius=25,
+                                     max_candidates=16, scan_block=17)
+    _assert_same_result(local, shard)
 
 
 def test_cosine_topk_oracle(key):

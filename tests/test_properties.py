@@ -84,6 +84,33 @@ def test_fixed_radius_monotone_in_radius(n, radius, seed):
 
 
 @given(
+    n=st.integers(1, 120),
+    q=st.integers(1, 4),
+    radius=st.integers(0, 64),
+    k=st.integers(1, 40),
+    scan_block=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+def test_streaming_nns_equals_dense_property(n, q, radius, k, scan_block, seed):
+    """Streaming NNS returns the identical NNSResult to the dense path for
+    any scan_block — including blocks that don't divide n, exceed n, or are
+    degenerate (1) — any radius, and any candidate bound."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**32, size=(n, 2), dtype=np.uint32))
+    queries = jnp.asarray(
+        rng.integers(0, 2**32, size=(q, 2), dtype=np.uint32))
+    dense = fixed_radius_nns(queries, codes, radius, k, scan_block=0)
+    stream = fixed_radius_nns(queries, codes, radius, k,
+                              scan_block=scan_block)
+    np.testing.assert_array_equal(
+        np.asarray(dense.indices), np.asarray(stream.indices))
+    np.testing.assert_array_equal(
+        np.asarray(dense.distances), np.asarray(stream.distances))
+    np.testing.assert_array_equal(
+        np.asarray(dense.counts), np.asarray(stream.counts))
+
+
+@given(
     k=st.integers(1, 10),
     n=st.integers(1, 50),
     thresh=st.floats(-2, 2),
