@@ -15,8 +15,13 @@ from repro.serving.recsys_engine import RecSysEngine, hit_rate
 
 
 def train_and_eval(n_users=1500, n_items=800, steps=300, radius=112,
-                   seed=0):
-    data = synthetic.make_movielens(n_users=n_users, n_items=n_items)
+                   seed=0, scan_block=None, history_len=20):
+    """Train a YoutubeDNN on the synthetic catalog and HR@10-eval the three
+    accuracy configs. `scan_block` forces the filtering-stage NNS plan
+    (None=auto, 0=dense, >0=streaming chunk) so accuracy can be re-anchored
+    through the streaming path at any catalog size."""
+    data = synthetic.make_movielens(n_users=n_users, n_items=n_items,
+                                    history_len=history_len)
     cfg = rs.YoutubeDNNConfig(
         n_items=data.n_items,
         user_features={"user_id": data.n_users, "gender": 3, "age": 7,
@@ -31,7 +36,8 @@ def train_and_eval(n_users=1500, n_items=800, steps=300, radius=112,
         _, g = lg(params, b)
         params, state = adamw.adamw_update(g, state, params, 3e-3,
                                            weight_decay=0.0)
-    engine = RecSysEngine.build(params, cfg, radius=radius, n_candidates=64)
+    engine = RecSysEngine.build(params, cfg, radius=radius, n_candidates=64,
+                                scan_block=scan_block)
     hrs = {mode: hit_rate(engine, data, k=10, mode=mode)
            for mode in ("fp32", "int8", "lsh")}
     return hrs

@@ -4,11 +4,20 @@ The iMARS filtering stage scans the *entire* item signature bank per query.
 The dense software path materializes a (q, n) int32 distance matrix — at the
 million-item north star that is gigabytes per batch and the capacity wall of
 the pipeline. The streaming path (`scan_block`) holds O(q * max_candidates)
-instead. This benchmark sweeps catalog size and records, per path:
+instead, and past the 4.19M-row packed-key capacity it scans as offset
+superblocks (wide keys) — the 8M/16M cells in the --full sweep exercise that
+wide path end to end. This benchmark sweeps catalog size and records, per
+path:
 
   * queries/sec through the jitted `fixed_radius_nns`
   * peak incremental RSS during the scan (compile + steady state)
-  * a bit-match check of streaming vs dense where both run
+  * a bit-match check against the dense oracle on a query slice, on every
+    cell where the dense matrix for that slice fits in RAM (including the
+    8M/16M wide-key cells)
+
+Paths: `streaming` (single device), `dense` (until the OOM guard), and
+`streaming_qp2` at >= 1M items — the streaming scan shard_mapped over a
+2-way query mesh axis (2 fake CPU devices), the query-block-parallel knob.
 
 Each (size, path) cell runs in a *fresh subprocess* so `ru_maxrss` deltas
 are real per-cell peaks, not shadows of an earlier phase's high-water mark
@@ -17,8 +26,11 @@ Dense is skipped (OOM guard) once its distance matrix alone would exceed
 DENSE_MAX_BYTES; the streaming path must hold >= 1M items on CPU with peak
 incremental memory under 10% of the dense matrix it replaces.
 
-  PYTHONPATH=src python -m benchmarks.nns_scale [--full]
+  PYTHONPATH=src python -m benchmarks.nns_scale [--full] [--sizes N,N,...]
+      [--assert-stream-mem BYTES]
 
+`--assert-stream-mem` exits non-zero if any streaming cell fails its memory
+contract (the nightly CI lane runs the 8M cell under a hard RSS budget).
 Emits BENCH_nns_scale.json (see benchmarks/bench_io.py).
 """
 from __future__ import annotations
@@ -30,8 +42,9 @@ import subprocess
 import sys
 
 SIZES = (65_536, 262_144, 1_048_576)
-FULL_SIZES = SIZES + (4_194_304,)
+FULL_SIZES = SIZES + (4_194_304, 8_388_608, 16_777_216)
 Q = 128  # concurrent queries per scan (one serving micro-batch)
+Q_ORACLE = 2  # query slice for the dense bit-match check on big cells
 WORDS = 8  # 256-bit signatures
 RADIUS = 96
 MAX_CANDIDATES = 128
@@ -40,8 +53,19 @@ DENSE_MAX_BYTES = 1 << 28  # skip dense when (q, n) int32 alone exceeds 256 MiB
 REPS = 2
 
 
+def scan_block_for(n: int) -> int:
+    """Scan chunk: 4096 up to 1M rows (the PR-2 operating point), ramping to
+    32k at 16M so per-chunk dispatch overhead stays off the critical path."""
+    return min(32_768, max(SCAN_BLOCK, n // 512))
+
+
 def _cell(n: int, path: str) -> dict:
     """One measurement in this process: build arrays, scan, report JSON."""
+    if path == "streaming_qp2":  # before jax import: 2 fake CPU devices
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=2")
+
     import gc
     import resource
     import time
@@ -50,7 +74,7 @@ def _cell(n: int, path: str) -> dict:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.nns import fixed_radius_nns
+    from repro.core.nns import fixed_radius_nns, query_parallel_nns
 
     rng = np.random.default_rng(0)
     queries = jnp.asarray(
@@ -58,11 +82,18 @@ def _cell(n: int, path: str) -> dict:
     db = jnp.asarray(
         rng.integers(0, 2**32, size=(n, WORDS), dtype=np.uint32))
     jax.block_until_ready(db)
-    scan_block = SCAN_BLOCK if path == "streaming" else 0
+    scan_block = scan_block_for(n) if path != "dense" else 0
 
-    def fn(q):
-        return fixed_radius_nns(q, db, RADIUS, MAX_CANDIDATES,
-                                scan_block=scan_block)
+    if path == "streaming_qp2":
+        mesh = jax.make_mesh((2,), ("qp",))
+
+        def fn(q):
+            return query_parallel_nns(mesh, "qp", q, db, RADIUS,
+                                      MAX_CANDIDATES, scan_block=scan_block)
+    else:
+        def fn(q):
+            return fixed_radius_nns(q, db, RADIUS, MAX_CANDIDATES,
+                                    scan_block=scan_block)
 
     gc.collect()
     rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
@@ -83,15 +114,31 @@ def _cell(n: int, path: str) -> dict:
            "dense_matrix_bytes": Q * n * 4,
            "scan_block": scan_block}
     if path == "streaming":
+        # single-device scan only: the qp2 cells replicate the catalog once
+        # per fake device in-process, so the 10%-of-dense metric would be
+        # meaningless noise for them
         row["mem_lt_10pct_dense"] = bool(rss_delta < 0.1 * Q * n * 4)
-    else:
-        # bit-match check on a query slice while the db is resident
-        d = fixed_radius_nns(queries[:8], db, RADIUS, MAX_CANDIDATES,
-                             scan_block=0)
-        s = fixed_radius_nns(queries[:8], db, RADIUS, MAX_CANDIDATES,
-                             scan_block=SCAN_BLOCK)
-        row["bitmatch_streaming"] = all(
-            bool(jnp.array_equal(a, b)) for a, b in zip(d, s))
+    # bit-match check while the db is resident: dense cells check streaming
+    # against themselves on a query slice; streaming cells check against the
+    # dense oracle wherever the slice's distance matrix fits in RAM — this
+    # is what certifies the 8M/16M wide-key cells (streaming == oracle)
+    if path == "dense":
+        # `res` already holds the dense full-batch output; only the
+        # streaming side needs computing
+        s = fixed_radius_nns(queries[:Q_ORACLE], db, RADIUS, MAX_CANDIDATES,
+                             scan_block=scan_block_for(n))
+        row["bitmatch_oracle"] = all(
+            bool(jnp.array_equal(a[:Q_ORACLE], b)) for a, b in zip(res, s))
+    elif Q_ORACLE * n * 4 <= DENSE_MAX_BYTES:
+        # jit the dense slice so the (Q_ORACLE, n, WORDS) xor/popcount
+        # intermediates fuse into the reduction — eager, they would be
+        # 2*WORDS x larger than the (Q_ORACLE, n) matrix the guard budgets
+        d = jax.jit(lambda qs: fixed_radius_nns(
+            qs, db, RADIUS, MAX_CANDIDATES, scan_block=0))(
+                queries[:Q_ORACLE])
+        # `res` is this path's own full-catalog result from the timing loop
+        row["bitmatch_oracle"] = all(
+            bool(jnp.array_equal(a, b[:Q_ORACLE])) for a, b in zip(d, res))
     return row
 
 
@@ -119,34 +166,34 @@ def _spawn_cell(n: int, path: str) -> dict:
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+def _derived(row: dict) -> str:
+    bits = [f"qps={row['qps']:.1f}",
+            f"rss_delta={row['rss_peak_delta_bytes']}",
+            f"dense_bytes={row['dense_matrix_bytes']}"]
+    if "mem_lt_10pct_dense" in row:
+        bits.append(f"mem_lt_10pct_dense={row['mem_lt_10pct_dense']}")
+    if "bitmatch_oracle" in row:
+        bits.append(f"bitmatch={row['bitmatch_oracle']}")
+    return ";".join(bits)
+
+
 def rows(sizes=SIZES):
     out, json_rows = [], []
     for n in sizes:
-        row = _spawn_cell(n, "streaming")
-        json_rows.append(row)
-        if row["status"] != "ok":
-            out.append((f"nns_scale/streaming/n{n}", 0.0, "status=failed"))
-        else:
-            out.append((
-                f"nns_scale/streaming/n{n}", row["us_per_query"],
-                f"qps={row['qps']:.1f};"
-                f"rss_delta={row['rss_peak_delta_bytes']};"
-                f"dense_bytes={row['dense_matrix_bytes']};"
-                f"mem_lt_10pct_dense={row['mem_lt_10pct_dense']}",
-            ))
+        paths = ["streaming"]
+        if n >= 1_048_576:
+            paths.append("streaming_qp2")  # query-parallel knob
         if Q * n * 4 <= DENSE_MAX_BYTES:
-            row = _spawn_cell(n, "dense")
+            paths.append("dense")
+        for path in paths:
+            row = _spawn_cell(n, path)
             json_rows.append(row)
             if row["status"] != "ok":
-                out.append((f"nns_scale/dense/n{n}", 0.0, "status=failed"))
+                out.append((f"nns_scale/{path}/n{n}", 0.0, "status=failed"))
             else:
-                out.append((
-                    f"nns_scale/dense/n{n}", row["us_per_query"],
-                    f"qps={row['qps']:.1f};"
-                    f"rss_delta={row['rss_peak_delta_bytes']};"
-                    f"bitmatch={row['bitmatch_streaming']}",
-                ))
-        else:
+                out.append((f"nns_scale/{path}/n{n}", row["us_per_query"],
+                            _derived(row)))
+        if Q * n * 4 > DENSE_MAX_BYTES:
             json_rows.append({"n": n, "q": Q, "path": "dense",
                               "status": "skipped_oom_guard",
                               "dense_matrix_bytes": Q * n * 4})
@@ -156,10 +203,49 @@ def rows(sizes=SIZES):
     return out, json_rows
 
 
+def check_stream_contract(json_rows, rss_budget: int) -> list[str]:
+    """The streaming cells' memory/bit-match contract (nightly lane)."""
+    problems = []
+    for row in json_rows:
+        if not row["path"].startswith("streaming"):
+            continue
+        if row["status"] != "ok":
+            problems.append(f"n={row['n']} {row['path']}: status failed")
+            continue
+        if row["path"] == "streaming":
+            # memory contract applies to the single-device scan only (the
+            # qp2 cells replicate the catalog once per fake device inside
+            # one process, so their RSS measures devices x db, not the
+            # scan) and only once the dense matrix dwarfs constant
+            # jit/runtime overheads
+            if (row["n"] >= 1_048_576
+                    and not row.get("mem_lt_10pct_dense", False)):
+                problems.append(
+                    f"n={row['n']} {row['path']}: rss_delta "
+                    f"{row['rss_peak_delta_bytes']} >= 10% of dense matrix")
+            if row["rss_peak_delta_bytes"] >= rss_budget:
+                problems.append(
+                    f"n={row['n']} {row['path']}: rss_delta "
+                    f"{row['rss_peak_delta_bytes']} >= budget {rss_budget}")
+        if "bitmatch_oracle" not in row:
+            # a cell whose oracle slice never ran is uncertified, not ok
+            problems.append(f"n={row['n']} {row['path']}: oracle check "
+                            f"skipped (dense slice exceeds DENSE_MAX_BYTES)")
+        elif not row["bitmatch_oracle"]:
+            problems.append(f"n={row['n']} {row['path']}: oracle mismatch")
+    return problems
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
-                    help="extend the sweep to 4M items")
+                    help="extend the sweep to the 4M/8M/16M wide-key cells")
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated catalog sizes (overrides --full)")
+    ap.add_argument("--assert-stream-mem", type=int, default=None,
+                    metavar="BYTES",
+                    help="exit 1 unless every streaming cell is ok, under "
+                         "10%% of the dense matrix AND under this RSS budget")
     ap.add_argument("--cell", nargs=2, metavar=("N", "PATH"),
                     help="internal: run one measurement and print JSON")
     args = ap.parse_args()
@@ -169,15 +255,29 @@ def main():
 
     from benchmarks.bench_io import write_bench_json
 
-    out, json_rows = rows(FULL_SIZES if args.full else SIZES)
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        sizes = FULL_SIZES if args.full else SIZES
+    out, json_rows = rows(sizes)
     for name, us, derived in out:
         print(f"{name},{us:.3f},{derived}")
     path = write_bench_json(
         "nns_scale", json_rows,
         config={"radius": RADIUS, "max_candidates": MAX_CANDIDATES,
-                "words": WORDS, "scan_block": SCAN_BLOCK, "q": Q,
+                "words": WORDS, "q": Q, "q_oracle": Q_ORACLE,
+                # the chunk each cell ran with is in its row's scan_block
+                # field (scan_block_for ramps it with catalog size)
                 "dense_max_bytes": DENSE_MAX_BYTES, "reps": REPS})
     print(f"# wrote {path}")
+    if args.assert_stream_mem is not None:
+        problems = check_stream_contract(json_rows, args.assert_stream_mem)
+        if problems:
+            for p in problems:
+                print(f"# CONTRACT VIOLATION: {p}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# streaming contract ok (rss budget "
+              f"{args.assert_stream_mem} bytes)")
 
 
 if __name__ == "__main__":

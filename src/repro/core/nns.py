@@ -22,7 +22,15 @@ LSH signatures (TCAM threshold match). We implement:
                                sharding *across* devices — and contributes a
                                count-bounded candidate buffer that is
                                all-gathered: the communication pattern of the
-                               paper's priority encoder + RSC.
+                               paper's priority encoder + RSC. Optionally
+                               *also* sharded over a query mesh axis
+                               (`query_axis`): query blocks scan the banks in
+                               parallel, composing both partitions.
+  * `query_parallel_nns`     — queries sharded over a mesh axis with the DB
+                               replicated: every device scans the full
+                               catalog for its query block (the multi-bank
+                               parallel-search mode of the paper's CMA
+                               fabric, applied along the query dimension).
   * cosine references        — the paper's accuracy-baseline configs
                                (fp32/int8 cosine top-k).
 
@@ -39,7 +47,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
-from repro.kernels.streaming_nns import BIG_DIST, max_streamable_items
+from repro.kernels.streaming_nns import BIG_DIST
 from repro.utils import shard_map
 
 # invalid-slot distance sentinel (single definition in
@@ -68,12 +76,14 @@ def fixed_radius_nns(
     *,
     scan_block: int | None = None,  # None=auto, 0=dense, >0=streaming chunk
     n_valid: jax.Array | int | None = None,  # rows >= n_valid never match
+    superblock: int | None = None,  # streaming superblock rows (testing knob)
 ) -> NNSResult:
     """All db items with hamming(query, item) <= radius (bounded, sorted)."""
     n, words = db_sigs.shape
     if scan_block is None:
-        use_stream = (db_mask is None and n >= STREAM_MIN_ITEMS
-                      and n <= max_streamable_items(words))
+        # beyond-capacity DBs stream as multiple superblocks, so size alone
+        # never forces the dense path
+        use_stream = db_mask is None and n >= STREAM_MIN_ITEMS
         block = DEFAULT_SCAN_BLOCK
     elif scan_block == 0:
         use_stream = False
@@ -87,7 +97,8 @@ def fixed_radius_nns(
     if use_stream:
         indices, distances, counts = ops.streaming_nns(
             query_sigs, db_sigs, radius=radius,
-            max_candidates=max_candidates, scan_block=block, n_valid=n_valid)
+            max_candidates=max_candidates, scan_block=block, n_valid=n_valid,
+            superblock=superblock)
         return NNSResult(indices=indices, distances=distances, counts=counts)
 
     d = ops.hamming_distances(query_sigs, db_sigs)  # (q, n)
@@ -112,16 +123,39 @@ def fixed_radius_nns(
     return NNSResult(indices=idx, distances=dist, counts=counts)
 
 
+def _pad_queries_to_axis(mesh, query_axis, query_sigs):
+    """Pad the query batch to a multiple of the query-axis size.
+
+    Returns (padded queries, pad count); `_slice_query_pad` undoes it on
+    the result so pad rows never leave the shard_map.
+    """
+    q = query_sigs.shape[0]
+    pad = (-q) % mesh.shape[query_axis]
+    if pad:
+        query_sigs = jnp.pad(query_sigs, ((0, pad), (0, 0)))
+    return query_sigs, pad
+
+
+def _slice_query_pad(res: NNSResult, pad: int) -> NNSResult:
+    if not pad:
+        return res
+    q = res.counts.shape[0] - pad
+    return NNSResult(indices=res.indices[:q], distances=res.distances[:q],
+                     counts=res.counts[:q])
+
+
 def sharded_fixed_radius_nns(
     mesh: jax.sharding.Mesh,
     axis: str,
-    query_sigs: jax.Array,  # (q, words) replicated
+    query_sigs: jax.Array,  # (q, words) replicated (or query-sharded)
     db_sigs: jax.Array,  # (n, words) row-sharded over `axis`
     radius: int,
     max_candidates: int = 128,
     n_valid: int | None = None,  # rows >= n_valid are padding, never match
     *,
     scan_block: int | None = None,  # forwarded to the per-shard scan
+    query_axis: str | None = None,  # also shard queries over this mesh axis
+    superblock: int | None = None,  # forwarded to the streaming scan
 ):
     """Fixed-radius NNS with the item DB sharded across the mesh.
 
@@ -132,19 +166,30 @@ def sharded_fixed_radius_nns(
     streaming-within-shard. Returned indices are global row ids. `n_valid`
     lets callers pad the DB to a multiple of the shard count without the pad
     rows ever matching.
+
+    `query_axis` additionally blocks the *query* batch over a second mesh
+    axis: each (query-block, bank) device pair scans independently and the
+    candidate gather stays confined to the bank axis, composing both
+    partitions. Queries are padded to a multiple of the query-axis size and
+    the pad rows sliced off the result.
     """
     n = db_sigs.shape[0]
     n_shards = mesh.shape[axis]
     per_shard = n // n_shards
     local_k = min(max_candidates, per_shard)
     n_valid = n if n_valid is None else n_valid
+    q_pad = 0
+    if query_axis is not None:
+        query_sigs, q_pad = _pad_queries_to_axis(mesh, query_axis,
+                                                 query_sigs)
 
     def local_scan(q_local, db_local):
         shard = jax.lax.axis_index(axis)
         # prefix count of real (non-padding) rows within this shard
         local_valid = jnp.clip(n_valid - shard * per_shard, 0, per_shard)
         res = fixed_radius_nns(q_local, db_local, radius, local_k,
-                               scan_block=scan_block, n_valid=local_valid)
+                               scan_block=scan_block, n_valid=local_valid,
+                               superblock=superblock)
         gidx = jnp.where(
             res.indices >= 0, res.indices + shard * per_shard, -1
         )
@@ -152,19 +197,66 @@ def sharded_fixed_radius_nns(
         all_idx = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
         all_dist = jax.lax.all_gather(res.distances, axis, axis=1, tiled=True)
         counts = jax.lax.psum(res.counts, axis)
-        neg_top, pos = jax.lax.top_k(-all_dist, k=max_candidates)
+        # tiny shards can gather fewer slots than max_candidates: select
+        # what exists, pad the rest with (-1, BIG)
+        k = min(max_candidates, all_dist.shape[-1])
+        neg_top, pos = jax.lax.top_k(-all_dist, k=k)
         dist = -neg_top
         idx = jnp.take_along_axis(all_idx, pos, axis=1)
         idx = jnp.where(dist < BIG, idx, -1)
+        if k < max_candidates:
+            pad = max_candidates - k
+            idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+            dist = jnp.pad(dist, ((0, 0), (0, pad)),
+                           constant_values=int(BIG))
         return NNSResult(indices=idx, distances=dist, counts=counts)
 
-    specs_in = (P(), P(axis, None))
-    specs_out = NNSResult(indices=P(), distances=P(), counts=P())
+    q_spec = P(query_axis)  # P(None) == replicated when query_axis is None
+    specs_in = (q_spec, P(axis, None))
+    specs_out = NNSResult(indices=q_spec, distances=q_spec, counts=q_spec)
     fn = shard_map(
         local_scan, mesh=mesh, in_specs=specs_in, out_specs=specs_out,
         check_vma=False,
     )
-    return fn(query_sigs, db_sigs)
+    return _slice_query_pad(fn(query_sigs, db_sigs), q_pad)
+
+
+def query_parallel_nns(
+    mesh: jax.sharding.Mesh,
+    query_axis: str,
+    query_sigs: jax.Array,  # (q, words) sharded over `query_axis`
+    db_sigs: jax.Array,  # (n, words) replicated
+    radius: int,
+    max_candidates: int = 128,
+    *,
+    scan_block: int | None = None,  # forwarded to the per-block scan
+    n_valid: jax.Array | int | None = None,
+    superblock: int | None = None,
+):
+    """Fixed-radius NNS with the QUERY batch sharded over `mesh[query_axis]`.
+
+    The catalog is replicated and every device scans all of it for its own
+    query block — the dual of `sharded_fixed_radius_nns`: no cross-device
+    candidate gather at all, so it parallelizes the streaming scan across
+    host/device cores at zero communication cost. Queries are padded to a
+    multiple of the axis size; pad rows are sliced off the result.
+    """
+    padded, pad = _pad_queries_to_axis(mesh, query_axis, query_sigs)
+    nv = jnp.asarray(
+        db_sigs.shape[0] if n_valid is None else n_valid, jnp.int32)
+
+    def local_scan(q_local, db_local, nv_local):
+        return fixed_radius_nns(q_local, db_local, radius, max_candidates,
+                                scan_block=scan_block, n_valid=nv_local,
+                                superblock=superblock)
+
+    q_spec = P(query_axis)
+    fn = shard_map(
+        local_scan, mesh=mesh, in_specs=(q_spec, P(), P()),
+        out_specs=NNSResult(indices=q_spec, distances=q_spec, counts=q_spec),
+        check_vma=False,
+    )
+    return _slice_query_pad(fn(padded, db_sigs, nv), pad)
 
 
 # ---------------------------------------------------------------------------

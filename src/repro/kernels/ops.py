@@ -23,6 +23,7 @@ backend ran. Ops with no Pallas implementation fall back to their ref.
 """
 from __future__ import annotations
 
+import math
 import os
 from typing import Callable, NamedTuple
 
@@ -117,10 +118,10 @@ def _flash_attention_pallas(q, k, v, *, causal=True, scale=None, interpret):
 
 
 def _streaming_nns_ref(queries, db, *, radius, max_candidates, scan_block,
-                       n_valid):
+                       n_valid, superblock=None):
     return ref.streaming_nns_ref(
         queries, db, radius, max_candidates, scan_block=scan_block,
-        n_valid=n_valid)
+        n_valid=n_valid, superblock=superblock)
 
 
 # the kernel's rank-select merge materializes an (block_q, m, m) compare with
@@ -133,14 +134,21 @@ _STREAM_PALLAS_MAX_BLOCK_N = 512
 
 
 def _streaming_nns_pallas(queries, db, *, radius, max_candidates, scan_block,
-                          n_valid, interpret):
+                          n_valid, superblock=None, interpret):
     limit = db.shape[0] if n_valid is None else n_valid
     block_n = min(max(128, round_up(scan_block, 128)),
                   _STREAM_PALLAS_MAX_BLOCK_N)
+    if superblock is not None:
+        # superblock boundaries must land on block boundaries: lane-align the
+        # override, then shrink the tile to a 128-multiple dividing it (any
+        # superblock <= capacity yields identical results, so the remap is
+        # output-invariant exactly like the scan_block -> block_n remap)
+        superblock = max(128, round_up(superblock, 128))
+        block_n = math.gcd(block_n, superblock)
     return streaming_nns_pallas(
         queries, db, jnp.asarray(limit, jnp.int32), radius=radius,
         max_candidates=max_candidates, block_n=block_n,
-        interpret=interpret)
+        superblock=superblock, interpret=interpret)
 
 
 register_kernel("hamming_distances", ref=ref.hamming_distance_ref,
@@ -169,16 +177,20 @@ def hamming_distances(queries, db):
 
 
 def streaming_nns(queries, db, *, radius, max_candidates,
-                  scan_block=4096, n_valid=None):
+                  scan_block=4096, n_valid=None, superblock=None):
     """Streaming fixed-radius NNS over the full DB, O(q*max_candidates) mem.
 
     Returns (indices, distances, counts) bit-matching the dense
     hamming_distances -> threshold -> top_k path; `n_valid` (dynamic ok)
     masks trailing padding rows, `scan_block` sets the scan chunk size.
+    DBs beyond the packed-key capacity (4.19M rows at 256-bit signatures)
+    scan as multiple superblocks transparently; `superblock` shrinks the
+    superblock size below capacity (a pure execution knob for tests —
+    results are superblock-invariant).
     """
     return dispatch("streaming_nns", queries, db, radius=radius,
                     max_candidates=max_candidates, scan_block=scan_block,
-                    n_valid=n_valid)
+                    n_valid=n_valid, superblock=superblock)
 
 
 def int8_matmul(x, w, x_scale, w_scale):

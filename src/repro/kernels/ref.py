@@ -13,7 +13,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.streaming_nns import BIG_DIST, big_key, key_shift
+from repro.kernels.streaming_nns import (
+    BIG_DIST,
+    big_key,
+    key_shift,
+    merge_candidate_buffers,
+    pack_key,
+    superblock_rows,
+    unpack_key,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +62,7 @@ def streaming_nns_ref(
     *,
     scan_block: int = 4096,
     n_valid: jax.Array | int | None = None,
+    superblock: int | None = None,  # rows per superblock (testing override)
 ):
     """`lax.scan`-chunked streaming NNS oracle, O(q * max_candidates) memory.
 
@@ -63,43 +72,70 @@ def streaming_nns_ref(
     Candidates are tracked as packed int32 keys `dist << shift | row` (see
     kernels/streaming_nns.py for the encoding) so one top_k per chunk merges
     the running buffer with the chunk's matches exactly.
+
+    Mirrors the kernel's wide-key scheme: DBs larger than the packed-key
+    capacity scan as superblocks of `superblock_rows` rows each, whose row
+    bits hold superblock-local offsets; global ids are reconstructed from
+    the superblock offset and the per-superblock top-K buffers are merged
+    with one stable sort on distance (`merge_candidate_buffers`). No row
+    cap remains beyond int32 indexing.
     """
     q, words = queries.shape
     n = db.shape[0]
     shift = key_shift(words)  # the one key encoding, shared with the kernel
     big = big_key(words)
-    if n > (1 << shift):
-        raise ValueError(
-            f"db rows {n} exceed streaming key capacity {1 << shift} at "
-            f"words={words}; shard the db first")
-
-    n_blocks = -(-n // scan_block)
-    pad = n_blocks * scan_block - n
-    db_p = jnp.pad(db, ((0, pad), (0, 0))) if pad else db
-    blocks = db_p.reshape(n_blocks, scan_block, words)
+    sb_rows = superblock_rows(words, superblock=superblock)
     limit = jnp.minimum(
         jnp.asarray(n if n_valid is None else n_valid, jnp.int32), n)
 
-    def step(carry, blk):
-        keys, counts = carry
-        db_blk, j = blk
-        d = hamming_distance_ref(queries, db_blk)  # (q, scan_block)
-        gidx = j * scan_block + jnp.arange(scan_block, dtype=jnp.int32)
-        within = jnp.logical_and(d <= radius, (gidx < limit)[None, :])
-        counts = counts + jnp.sum(within, axis=-1).astype(jnp.int32)
-        new_keys = jnp.where(within, d * (1 << shift) + gidx[None, :], big)
-        merged = jnp.concatenate([keys, new_keys], axis=1)
-        neg_top, _ = jax.lax.top_k(-merged, max_candidates)
-        return (-neg_top, counts), None
+    def scan_superblock(db_s, limit_s):
+        """One packed-key lax.scan over <= sb_rows rows -> ((q, K), (q,))."""
+        n_s = db_s.shape[0]
+        # chunks never need to exceed the superblock: an oversized
+        # scan_block would round the padding up to itself and scan the
+        # (all-masked) pad rows too
+        block = max(1, min(scan_block, n_s))
+        n_blocks = max(1, -(-n_s // block))
+        pad = n_blocks * block - n_s
+        db_p = jnp.pad(db_s, ((0, pad), (0, 0))) if pad else db_s
+        blocks = db_p.reshape(n_blocks, block, words)
 
-    keys0 = jnp.full((q, max_candidates), big, jnp.int32)
-    counts0 = jnp.zeros((q,), jnp.int32)
-    (keys, counts), _ = jax.lax.scan(
-        step, (keys0, counts0),
-        (blocks, jnp.arange(n_blocks, dtype=jnp.int32)))
-    valid = keys < big
-    indices = jnp.where(valid, keys & ((1 << shift) - 1), -1)
-    distances = jnp.where(valid, keys >> shift, jnp.int32(BIG_DIST))
+        def step(carry, blk):
+            keys, counts = carry
+            db_blk, j = blk
+            d = hamming_distance_ref(queries, db_blk)  # (q, block)
+            lidx = j * block + jnp.arange(block, dtype=jnp.int32)
+            within = jnp.logical_and(d <= radius, (lidx < limit_s)[None, :])
+            counts = counts + jnp.sum(within, axis=-1).astype(jnp.int32)
+            new_keys = jnp.where(
+                within, pack_key(d, lidx[None, :], words), big)
+            merged = jnp.concatenate([keys, new_keys], axis=1)
+            neg_top, _ = jax.lax.top_k(-merged, max_candidates)
+            return (-neg_top, counts), None
+
+        keys0 = jnp.full((q, max_candidates), big, jnp.int32)
+        counts0 = jnp.zeros((q,), jnp.int32)
+        (keys, counts), _ = jax.lax.scan(
+            step, (keys0, counts0),
+            (blocks, jnp.arange(n_blocks, dtype=jnp.int32)))
+        return keys, counts
+
+    all_idx, all_dist = [], []
+    counts = jnp.zeros((q,), jnp.int32)
+    for off in range(0, max(n, 1), sb_rows):
+        db_s = db[off:off + sb_rows]
+        keys, cnt = scan_superblock(
+            db_s, jnp.clip(limit - off, 0, db_s.shape[0]))
+        dist, local = unpack_key(keys, words)
+        valid = keys < big
+        all_idx.append(jnp.where(valid, local + off, -1))
+        all_dist.append(jnp.where(valid, dist, jnp.int32(BIG_DIST)))
+        counts = counts + cnt
+    if len(all_idx) == 1:
+        return all_idx[0], all_dist[0], counts
+    indices, distances = merge_candidate_buffers(
+        jnp.concatenate(all_idx, axis=1), jnp.concatenate(all_dist, axis=1),
+        max_candidates)
     return indices, distances, counts
 
 

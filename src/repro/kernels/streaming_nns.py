@@ -15,10 +15,24 @@ so peak memory is O(q * max_candidates) regardless of DB size.
 
 Candidate bookkeeping packs (distance, db_row) into one int32 sort key,
 ``key = dist << shift | row`` with ``shift = 31 - bitlen(32 * words + 1)``
-(256-bit signatures -> 9 distance bits, 22 row bits, DBs up to 4.19M rows).
-Ascending key order is exactly the dense path's (distance, index) order —
-`jax.lax.top_k` breaks ties by lower index — so the streaming result is
-bit-identical to the dense `fixed_radius_nns` output.
+(256-bit signatures -> 9 distance bits, 22 row bits). Ascending key order is
+exactly the dense path's (distance, index) order — `jax.lax.top_k` breaks
+ties by lower index — so the streaming result is bit-identical to the dense
+`fixed_radius_nns` output.
+
+**Wide keys (DBs past the packed-key capacity).** A single packed key can
+only index `2**shift` rows (4.19M at 256-bit signatures). Instead of paying
+for two-word (dist, row_hi/row_lo) keys everywhere, the scan is split into
+*superblocks* of at most `2**shift` rows: the row bits of every key hold the
+offset *within the current superblock* (so the in-kernel rank-select merge
+stays pure int32), each superblock accumulates its own resident candidate
+buffer, and full row ids are reconstructed on the host as
+``superblock * superblock_rows + local_row``. The per-superblock top-K
+buffers are then merged host-side by one *stable* sort on distance
+(`merge_candidate_buffers`): each buffer is already (dist, row)-sorted and
+superblock row ranges are disjoint and ascending, so stability alone
+reproduces the exact global (distance, index) order. DB capacity becomes
+int32 row ids (2**31 rows) rather than `2**shift`.
 
 The per-block merge keeps the buffer sorted: concatenate the resident buffer
 with the block's candidate keys, compute each element's rank with one
@@ -29,10 +43,11 @@ Mosaic lowers without needing an in-kernel sort. Blocks with no matches (the
 common case at selective radii) skip the merge entirely under `pl.when`.
 
 Grid: (q_blocks, n_blocks) with the DB dimension innermost and *sequential*
-— the (block_q, K) output tile is revisited across the scan and stays
-resident in VMEM, the same accumulator pattern as the embedding-pool kernel.
-`n_valid` rides along as a dynamic (1, 1) scalar operand so the sharded path
-can mask per-shard padding rows with a traced value.
+— the (1, block_q, K) candidate tile is revisited across its superblock's
+blocks and stays resident in VMEM, the same accumulator pattern as the
+embedding-pool kernel; it re-initializes when the scan crosses into the next
+superblock. `n_valid` rides along as a dynamic (1, 1) scalar operand so the
+sharded path can mask per-shard padding rows with a traced value.
 """
 from __future__ import annotations
 
@@ -61,17 +76,70 @@ def big_key(words: int) -> int:
 
 
 def max_streamable_items(words: int) -> int:
-    """Largest DB the packed int32 key can index (4.19M rows at words=8)."""
+    """Rows one packed int32 key can index == the max superblock size
+    (4.19M at words=8). DBs beyond this scan as multiple superblocks."""
     return 1 << key_shift(words)
 
 
+def pack_key(dist, row, words: int):
+    """Pack (dist, superblock-local row) into one int32 sort key.
+
+    Total preorder: key(a) < key(b) iff (dist_a, row_a) < (dist_b, row_b)
+    lexicographically, for any dist <= 32*words and row < 2**key_shift.
+    Works on ints and on jnp arrays alike.
+    """
+    return dist * (1 << key_shift(words)) + row
+
+
+def unpack_key(key, words: int):
+    """Inverse of `pack_key`: key -> (dist, superblock-local row)."""
+    shift = key_shift(words)
+    return key >> shift, key & ((1 << shift) - 1)
+
+
+def superblock_rows(words: int, block_n: int = 1,
+                    superblock: int | None = None) -> int:
+    """Rows per superblock: the packed-key capacity (or the `superblock`
+    testing override, clamped to it) floored to a multiple of `block_n` so
+    superblock boundaries land on kernel block boundaries."""
+    cap = max_streamable_items(words)
+    sb = cap if superblock is None else min(int(superblock), cap)
+    sb = (sb // block_n) * block_n
+    if sb <= 0:
+        raise ValueError(
+            f"superblock {superblock} smaller than one block ({block_n} "
+            f"rows) at words={words}")
+    return sb
+
+
+def merge_candidate_buffers(indices: jax.Array, distances: jax.Array,
+                            max_candidates: int):
+    """Merge per-superblock sorted candidate buffers into the global top-K.
+
+    `indices` / `distances` are (q, S*K), the S per-superblock buffers
+    concatenated in ascending-superblock order. Each buffer is sorted by
+    (distance, row) with invalid slots (-1, BIG_DIST) at its tail, and the
+    row ranges of successive superblocks are disjoint and ascending — so ONE
+    stable sort on distance alone reproduces the exact lexicographic
+    (distance, row) order: among equal distances, stability preserves
+    ascending-superblock (hence ascending-row) order.
+    """
+    order = jnp.argsort(distances, axis=-1, stable=True)
+    order = order[:, :max_candidates]
+    return (jnp.take_along_axis(indices, order, axis=1),
+            jnp.take_along_axis(distances, order, axis=1))
+
+
 def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
-                          *, radius, shift, big):
+                          *, radius, shift, big, blocks_per_sb):
     j = pl.program_id(1)
 
-    @pl.when(j == 0)
-    def _init():
+    @pl.when(j % blocks_per_sb == 0)
+    def _init_keys():  # fresh candidate buffer per superblock
         keys_ref[...] = jnp.full(keys_ref.shape, big, jnp.int32)
+
+    @pl.when(j == 0)
+    def _init_counts():
         counts_ref[...] = jnp.zeros(counts_ref.shape, jnp.int32)
 
     q = q_ref[...]  # (block_q, words) uint32
@@ -79,31 +147,34 @@ def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
     block_n = db.shape[0]
     x = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
     d = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
-    gidx = j * block_n + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    gidx = j * block_n + iota  # global row id (int32-safe up to 2**31 rows)
     within = jnp.logical_and(d <= radius, gidx < limit_ref[0, 0])
     counts_ref[...] += jnp.sum(within.astype(jnp.int32), axis=1, keepdims=True)
 
     @pl.when(jnp.any(within))
     def _merge():
-        new_keys = jnp.where(within, d * (1 << shift) + gidx, big)
-        merged = jnp.concatenate([keys_ref[...], new_keys], axis=1)  # (bq, m)
+        # row bits carry the superblock-LOCAL offset so the key stays int32
+        lidx = (j % blocks_per_sb) * block_n + iota
+        new_keys = jnp.where(within, d * (1 << shift) + lidx, big)
+        merged = jnp.concatenate([keys_ref[0], new_keys], axis=1)  # (bq, m)
         rank = jnp.sum(
             (merged[:, None, :] < merged[:, :, None]).astype(jnp.int32),
             axis=-1,
         )  # (bq, m): unique for valid keys, >= K only for sentinels beyond K
-        n_slots = keys_ref.shape[1]
+        n_slots = keys_ref.shape[2]
         slot = jax.lax.broadcasted_iota(
             jnp.int32, (*merged.shape, n_slots), 2)
         take = jnp.logical_and(rank[..., None] == slot,
                                (merged < big)[..., None])
-        keys_ref[...] = jnp.min(
+        keys_ref[0] = jnp.min(
             jnp.where(take, merged[..., None], big), axis=1)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("radius", "max_candidates", "block_q", "block_n",
-                     "interpret"),
+                     "superblock", "interpret"),
 )
 def streaming_nns_pallas(
     queries: jax.Array,  # (q, words) uint32
@@ -114,6 +185,7 @@ def streaming_nns_pallas(
     max_candidates: int,
     block_q: int = 8,
     block_n: int = 512,
+    superblock: int | None = None,  # rows per superblock (testing override)
     interpret: bool = False,
 ):
     """Streaming fixed-radius NNS -> (indices, distances, counts).
@@ -121,49 +193,63 @@ def streaming_nns_pallas(
     Bit-matches the dense hamming->threshold->top_k path: indices/distances
     are the `max_candidates` nearest matches sorted by (distance, index),
     padded with (-1, BIG_DIST); counts are total matches within radius.
+    DBs larger than the packed-key capacity scan as multiple superblocks
+    whose candidate buffers are merged host-side (see module docstring).
     """
     q, words = queries.shape
     n, words2 = db.shape
     assert words == words2, (words, words2)
     shift = key_shift(words)
-    if n > (1 << shift):
-        raise ValueError(
-            f"db rows {n} exceed streaming key capacity {1 << shift} at "
-            f"words={words}; shard the db first")
+    big = big_key(words)
+    sb_rows = superblock_rows(words, block_n, superblock)
+    blocks_per_sb = sb_rows // block_n
 
     # the resident buffer is lane-padded; extra slots decode to padding
     k_pad = max(128, round_up(max_candidates, 128))
     qp = round_up(q, block_q)
     np_ = round_up(n, block_n)
+    n_blocks = np_ // block_n
+    n_sb = cdiv(n_blocks, blocks_per_sb)
     queries_p = jnp.pad(queries, ((0, qp - q), (0, 0))) if qp > q else queries
     db_p = jnp.pad(db, ((0, np_ - n), (0, 0))) if np_ > n else db
     limit = jnp.reshape(
         jnp.minimum(jnp.asarray(n_valid, jnp.int32), n), (1, 1))
 
     kernel = functools.partial(
-        _streaming_nns_kernel, radius=radius, shift=shift,
-        big=big_key(words))
+        _streaming_nns_kernel, radius=radius, shift=shift, big=big,
+        blocks_per_sb=blocks_per_sb)
     keys, counts = pl.pallas_call(
         kernel,
-        grid=(qp // block_q, np_ // block_n),
+        grid=(qp // block_q, n_blocks),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((block_q, words), lambda i, j: (i, 0)),
             pl.BlockSpec((block_n, words), lambda i, j: (j, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_q, k_pad),
+                         lambda i, j: (j // blocks_per_sb, i, 0)),
             pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
         ),
         out_shape=(
-            jax.ShapeDtypeStruct((qp, k_pad), jnp.int32),
+            jax.ShapeDtypeStruct((n_sb, qp, k_pad), jnp.int32),
             jax.ShapeDtypeStruct((qp, 1), jnp.int32),
         ),
         interpret=interpret,
     )(limit, queries_p, db_p)
 
-    keys = keys[:q, :max_candidates]  # buffer is sorted: first K = best K
-    valid = keys < big_key(words)
-    indices = jnp.where(valid, keys & ((1 << shift) - 1), -1)
-    distances = jnp.where(valid, keys >> shift, BIG_DIST)
+    # buffers are sorted: first K slots of each superblock = its best K
+    keys = keys[:, :q, :max_candidates]  # (n_sb, q, K)
+    dist, local = unpack_key(keys, words)
+    valid = keys < big
+    offsets = (jnp.arange(n_sb, dtype=jnp.int32) * sb_rows)[:, None, None]
+    indices = jnp.where(valid, local + offsets, -1)
+    distances = jnp.where(valid, dist, BIG_DIST)
+    if n_sb > 1:  # wide DB: merge the per-superblock buffers
+        indices = jnp.moveaxis(indices, 0, 1).reshape(q, -1)
+        distances = jnp.moveaxis(distances, 0, 1).reshape(q, -1)
+        indices, distances = merge_candidate_buffers(
+            indices, distances, max_candidates)
+    else:
+        indices, distances = indices[0], distances[0]
     return indices, distances, counts[:q, 0]

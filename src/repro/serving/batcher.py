@@ -17,9 +17,13 @@ set of fixed batch shapes, and feeds each bucket through **one** jitted
 
 Bucketing keeps the set of compiled shapes tiny (powers of two up to
 `max_batch`): a bucket compiles once and is reused forever after, so the
-steady-state cost of a query is pure device compute. Padding replicates the
-last pending query and the padded rows are dropped before results are handed
-back — padding can never change a served result (tested).
+steady-state cost of a query is pure device compute. Padding rows carry
+*invalid* ids (-1 everywhere) — they read zero rows, never touch the
+hot-row cache counters, and are dropped before results are handed back, so
+padding can never change a served result or a measured hit rate (tested;
+this used to replicate the last pending query, which made the padded tail
+of a bucket — e.g. a queue smaller than the smallest bucket — re-serve real
+ids and lean on the `valid` mask alone to keep the counters honest).
 
 The hot-cache hit accumulator is donated to the jitted step (`serve_step`'s
 third argument), so the counters update in place across batches without a
@@ -118,17 +122,21 @@ class MicroBatcher:
     def _stack(self, queries: list[dict], bucket: int) -> dict:
         """Stack per-user queries into one padded (bucket, ...) batch.
 
-        The `valid` row mask marks real queries: serve_step drops padding
-        rows' ids so they neither count as hot-cache lookups nor read rows.
+        Padding rows are INVALID queries: every id is -1, so they read zero
+        rows and can never count as hot-cache lookups — even without the
+        `valid` row mask (which still marks real queries so their results
+        are the ones handed back).
         """
         n = len(queries)
-        queries = queries + [queries[-1]] * (bucket - n)  # replicate last
+        history_len = len(np.asarray(queries[0]["history"]))
         batch = {
-            name: np.asarray([q[name] for q in queries], np.int32)
-            for name in self._feature_names
+            name: np.full(bucket, -1, np.int32) for name in
+            (*self._feature_names, "genre")
         }
-        batch["genre"] = np.asarray([q["genre"] for q in queries], np.int32)
-        batch["history"] = np.stack(
+        batch["history"] = np.full((bucket, history_len), -1, np.int32)
+        for name in (*self._feature_names, "genre"):
+            batch[name][:n] = [q[name] for q in queries]
+        batch["history"][:n] = np.stack(
             [np.asarray(q["history"], np.int32) for q in queries])
         batch["valid"] = np.arange(bucket) < n
         return {k: jax.numpy.asarray(v) for k, v in batch.items()}

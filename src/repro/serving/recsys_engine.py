@@ -45,6 +45,7 @@ from repro.core.lsh import lsh_signature, make_lsh_projections
 from repro.core.nns import (
     NNSResult,
     fixed_radius_nns,
+    query_parallel_nns,
     sharded_fixed_radius_nns,
 )
 from repro.core.quantization import QuantizedTensor, quantize_rowwise
@@ -70,7 +71,7 @@ class ServeResult(NamedTuple):
 
 @pytree_dataclass(meta_fields=(
     "cfg", "radius", "n_candidates", "top_k", "nns_mesh", "nns_axis",
-    "scan_block"))
+    "scan_block", "nns_query_axis"))
 class RecSysEngine:
     tables_q: dict  # name -> QuantizedTensor (int8 UIETs)
     item_table_q: QuantizedTensor  # int8 ItET
@@ -87,6 +88,7 @@ class RecSysEngine:
     nns_mesh: jax.sharding.Mesh | None = None
     nns_axis: str | None = None
     scan_block: int | None = None  # filtering NNS: None=auto, 0=dense, >0=chunk
+    nns_query_axis: str | None = None  # mesh axis scanning query blocks in parallel
 
     @staticmethod
     def build(params: dict, cfg: rs.YoutubeDNNConfig, *, lsh_bits: int = 256,
@@ -126,22 +128,32 @@ class RecSysEngine:
             radius=radius, n_candidates=n_candidates, top_k=top_k,
             scan_block=scan_block)
 
-    def shard(self, mesh: jax.sharding.Mesh, axis: str) -> "RecSysEngine":
-        """Row-shard the filtering-stage signature DB over `mesh[axis]`.
+    def shard(self, mesh: jax.sharding.Mesh, axis: str | None = None, *,
+              query_axis: str | None = None) -> "RecSysEngine":
+        """Distribute the filtering-stage NNS over `mesh`.
 
-        Pads `item_sigs` to a multiple of the axis size (pad rows are
-        excluded from matching via `n_valid`), places it with a
-        NamedSharding, and switches `filter_step` to the shard_map NNS.
+        `axis` row-shards the signature DB (pads `item_sigs` to a multiple
+        of the axis size — pad rows are excluded from matching via
+        `n_valid` — and places it with a NamedSharding); `query_axis` scans
+        query blocks in parallel over a second mesh axis with each block
+        seeing its bank (or, with `axis=None`, the whole replicated
+        catalog). Both compose: `shard(mesh, "banks", query_axis="qp")`
+        partitions (query block x bank).
         """
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        n_shards = mesh.shape[axis]
-        n = self.item_sigs.shape[0]
-        pad = (-n) % n_shards
-        sigs = jnp.pad(self.item_sigs, ((0, pad), (0, 0)))
-        sigs = jax.device_put(sigs, NamedSharding(mesh, P(axis, None)))
+        if axis is None and query_axis is None:
+            raise ValueError("shard() needs a db axis, a query_axis, or both")
+        sigs = self.item_sigs
+        if axis is not None:
+            n_shards = mesh.shape[axis]
+            n = sigs.shape[0]
+            pad = (-n) % n_shards
+            sigs = jnp.pad(sigs, ((0, pad), (0, 0)))
+            sigs = jax.device_put(sigs, NamedSharding(mesh, P(axis, None)))
         kw = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
-        kw.update(item_sigs=sigs, nns_mesh=mesh, nns_axis=axis)
+        kw.update(item_sigs=sigs, nns_mesh=mesh, nns_axis=axis,
+                  nns_query_axis=query_axis)
         return RecSysEngine(**kw)
 
     # ------------------------------------------------------------------
@@ -213,12 +225,20 @@ def _features(engine: RecSysEngine, batch: dict):
 
 
 def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
-    if engine.nns_mesh is not None:
+    if engine.nns_mesh is not None and engine.nns_axis is not None:
         return sharded_fixed_radius_nns(
             engine.nns_mesh, engine.nns_axis, q_sigs, engine.item_sigs,
             engine.radius, engine.n_candidates,
             n_valid=engine.item_table_q.shape[0],
-            scan_block=engine.scan_block)
+            scan_block=engine.scan_block,
+            query_axis=engine.nns_query_axis)
+    if engine.nns_mesh is not None:  # query-parallel only, db replicated
+        # n_valid still matters: item_sigs may carry pad rows from an
+        # earlier bank-sharded incarnation of this engine
+        return query_parallel_nns(
+            engine.nns_mesh, engine.nns_query_axis, q_sigs, engine.item_sigs,
+            engine.radius, engine.n_candidates, scan_block=engine.scan_block,
+            n_valid=engine.item_table_q.shape[0])
     return fixed_radius_nns(q_sigs, engine.item_sigs, engine.radius,
                             engine.n_candidates,
                             scan_block=engine.scan_block)

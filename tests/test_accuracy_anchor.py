@@ -1,0 +1,50 @@
+"""Slow accuracy re-anchor: HR@10 through the STREAMING filtering path on a
+synthetic catalog 10x the quick MovieLens config (3000 items — past
+STREAM_MIN_ITEMS-scale behavior is forced explicitly via scan_block).
+
+The paper's Sec. IV-B result is an accuracy ORDERING (fp32 ~ int8 > LSH);
+PR 2 moved the filtering scan to the streaming kernel and this PR rebuilt
+its candidate tracking around wide keys — so the three HR numbers are
+pinned here as seeded goldens to +-1e-3. Any drift in the retrieval
+numerics (key packing, merge order, radius semantics) moves at least one
+full user (1/400 = 2.5e-3) and trips the assert, while jit scheduling noise
+cannot: the whole pipeline is integer/deterministic for fixed seeds.
+
+Nightly CI runs this (too slow for the per-push lane: it trains the tower).
+"""
+import pytest
+
+pytestmark = pytest.mark.slow
+
+# measured on the pinned seeds (n_users=400, n_items=3000, steps=1500,
+# radius=128, seed=0, scan_block=512) — see benchmarks/accuracy_hr.py.
+# radius is re-tuned for the 10x catalog: at 3000 items the 300-item quick
+# radius (112) retrieves nothing (lsh HR 0.0); 128 restores the paper's
+# fp32 ~ int8 > lsh > chance structure (chance = 10/3000 = 0.0033)
+GOLDEN = {"fp32": 0.015, "int8": 0.015, "lsh": 0.01}
+
+
+def test_hr10_streaming_10x_catalog_matches_goldens():
+    from benchmarks.accuracy_hr import train_and_eval
+
+    hrs = train_and_eval(n_users=400, n_items=3000, steps=1500, radius=128,
+                         seed=0, scan_block=512)
+    for mode, want in GOLDEN.items():
+        assert abs(hrs[mode] - want) <= 1e-3, (mode, hrs[mode], want)
+    # the paper's structure must survive the streaming path: quantization
+    # is ~free, the LSH/Hamming filtering costs a few points but stays
+    # well above chance
+    assert abs(hrs["fp32"] - hrs["int8"]) < 0.05
+    assert hrs["lsh"] <= hrs["int8"] + 0.02
+    assert hrs["lsh"] > 1.2 * 10 / 3000
+
+
+def test_streaming_and_dense_hr_identical():
+    """The execution plan is not allowed to move accuracy at all: HR@10
+    through the forced-streaming engine == the forced-dense engine."""
+    from benchmarks.accuracy_hr import train_and_eval
+
+    kw = dict(n_users=120, n_items=600, steps=60, radius=112, seed=3)
+    stream = train_and_eval(scan_block=96, **kw)
+    dense = train_and_eval(scan_block=0, **kw)
+    assert stream == dense

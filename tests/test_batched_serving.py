@@ -167,6 +167,29 @@ def test_serve_stats_accumulate_across_batches(served):
     assert (int(stats2.hits), int(stats2.lookups)) == (2 * one[0], 2 * one[1])
 
 
+def test_tail_bucket_pads_with_invalid_ids(served):
+    """Regression: a pending queue smaller than the smallest bucket pads
+    with INVALID query ids (-1) — the padded tail must neither touch the
+    hot-row cache counters nor change the served result. (Padding used to
+    replicate the last real query and rely on the `valid` mask alone.)"""
+    engine, data = served
+    mb = MicroBatcher(engine, max_batch=8, buckets=(4, 8))
+    out = mb.serve_many(_queries(data, [3]))  # 1 pending < smallest bucket 4
+    assert mb.n_padded == 3 and mb.n_batches == 1
+    # the padded rows really are invalid queries, not clones of query 3
+    batch = mb._stack([q for _, q in [(0, _queries(data, [3])[0])]], 4)
+    assert (np.asarray(batch["history"])[1:] == -1).all()
+    assert (np.asarray(batch["genre"])[1:] == -1).all()
+    # counters match a padding-free serve of the same single query exactly
+    _, _, _, unpadded = serve_step(engine, _batch(data, np.array([3])),
+                                   CacheStats.zero())
+    assert int(mb._stats.lookups) == int(unpadded.lookups)
+    assert int(mb._stats.hits) == int(unpadded.hits)
+    # and the recommendation is unchanged
+    direct = engine.serve(_batch(data, np.array([3])))
+    np.testing.assert_array_equal(out[0].items, np.asarray(direct.items)[0])
+
+
 def test_sharded_engine_matches_local(served):
     """CPU 1-device mesh: sharded filter stage == single-device, end to end."""
     engine, data = served
@@ -200,6 +223,46 @@ def test_engine_scan_block_serves_identically(served):
                                       np.asarray(got.nns.indices))
         np.testing.assert_array_equal(np.asarray(base.nns.counts),
                                       np.asarray(got.nns.counts))
+
+
+def test_query_parallel_engine_matches_local(served):
+    """engine.shard with a query axis (with and without a db axis) must not
+    change a single served item."""
+    engine, data = served
+    batch = _batch(data, np.arange(6))
+    base = engine.serve(batch)
+    qp_only = engine.shard(jax.make_mesh((1,), ("qp",)), query_axis="qp")
+    both = engine.shard(jax.make_mesh((1, 1), ("qp", "banks")), "banks",
+                        query_axis="qp")
+    for eng in (qp_only, both):
+        got = eng.serve(batch)
+        np.testing.assert_array_equal(np.asarray(base.items),
+                                      np.asarray(got.items))
+        np.testing.assert_array_equal(np.asarray(base.nns.indices),
+                                      np.asarray(got.nns.indices))
+        np.testing.assert_array_equal(np.asarray(base.nns.counts),
+                                      np.asarray(got.nns.counts))
+    with pytest.raises(ValueError, match="query_axis"):
+        engine.shard(jax.make_mesh((1,), ("qp",)))
+
+
+def test_query_parallel_engine_masks_padded_sigs(served):
+    """Regression: an engine whose item_sigs carry pad rows (e.g. from an
+    earlier bank-sharded incarnation) re-sharded to query-parallel-only
+    must never surface a pad row (index >= n_items) as a candidate."""
+    import dataclasses
+
+    engine, data = served
+    batch = _batch(data, np.arange(5))
+    want = engine.serve(batch)
+    n_items = engine.item_table_q.shape[0]
+    padded = jnp.pad(engine.item_sigs, ((0, 3), (0, 0)))  # all-zero sigs
+    qp = dataclasses.replace(engine, item_sigs=padded).shard(
+        jax.make_mesh((1,), ("qp",)), query_axis="qp")
+    got = qp.serve(batch)
+    assert (np.asarray(got.nns.indices) < n_items).all()
+    np.testing.assert_array_equal(np.asarray(want.items),
+                                  np.asarray(got.items))
 
 
 def test_sharded_nns_with_padding_excludes_pad_rows(key):

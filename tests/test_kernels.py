@@ -85,16 +85,58 @@ def test_streaming_nns_kernel_n_valid_masks_tail(key):
     assert (np.asarray(got[0]) < 61).all()
 
 
-def test_streaming_nns_capacity_guard():
-    """DBs beyond the packed-key index capacity are rejected loudly."""
+def test_streaming_past_packed_key_capacity():
+    """Regression for the 4.19M-row cap: DBs beyond the packed-key index
+    capacity used to raise; they now scan as multiple superblocks (wide
+    keys) in both the oracle and the kernel — shape-level check here, value
+    equivalence in the superblock tests below and the benchmark sweep."""
     from repro.kernels.streaming_nns import max_streamable_items
 
-    assert max_streamable_items(8) == 1 << 22  # 256-bit sigs: 4.19M rows
-    with pytest.raises(ValueError, match="capacity"):
-        jax.eval_shape(
-            lambda q, d: ref.streaming_nns_ref(q, d, 10, 4),
-            jax.ShapeDtypeStruct((1, 8), jnp.uint32),
-            jax.ShapeDtypeStruct(((1 << 22) + 1, 8), jnp.uint32))
+    assert max_streamable_items(8) == 1 << 22  # 256-bit sigs: 4.19M rows/sb
+    wide = jax.ShapeDtypeStruct(((1 << 22) + 129, 8), jnp.uint32)
+    q = jax.ShapeDtypeStruct((2, 8), jnp.uint32)
+    idx, dist, cnt = jax.eval_shape(
+        lambda qq, d: ref.streaming_nns_ref(qq, d, 10, 4), q, wide)
+    assert idx.shape == (2, 4) and cnt.shape == (2,)
+    idx, dist, cnt = jax.eval_shape(
+        lambda qq, d: streaming_nns_pallas(
+            qq, d, jnp.int32(d.shape[0]), radius=10, max_candidates=4),
+        q, wide)
+    assert idx.shape == (2, 4) and idx.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("superblock,block_n", [(256, 128), (512, 256),
+                                                (384, 128)])
+def test_streaming_nns_kernel_superblocks_vs_ref(key, superblock, block_n):
+    """Wide-key path: multiple superblocks with host-side merge must
+    bit-match the oracle run at a DIFFERENT superblock split (results are
+    superblock-invariant) and at the default (single-superblock) split."""
+    queries, db = _sig_pair(key, 5, 1111, 8)
+    want = ref.streaming_nns_ref(queries, db, 105, 12, scan_block=256)
+    for sb_ref in (None, 128):
+        got_ref = ref.streaming_nns_ref(queries, db, 105, 12, scan_block=96,
+                                        superblock=sb_ref)
+        for g, w in zip(got_ref, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    got = streaming_nns_pallas(
+        queries, db, jnp.int32(1111), radius=105, max_candidates=12,
+        block_q=4, block_n=block_n, superblock=superblock, interpret=True)
+    for g, w, name in zip(got, want, ("indices", "distances", "counts")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+def test_streaming_nns_kernel_n_valid_across_superblocks(key):
+    """Dynamic n_valid landing mid-superblock masks the tail exactly."""
+    queries, db = _sig_pair(key, 3, 700, 8)
+    want = ref.streaming_nns_ref(queries, db, 110, 8, scan_block=64,
+                                 n_valid=389)
+    got = streaming_nns_pallas(
+        queries, db, jnp.int32(389), radius=110, max_candidates=8,
+        block_n=128, superblock=256, interpret=True)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert (np.asarray(got[0]) < 389).all()
 
 
 # ---------------------------------------------------------------------------

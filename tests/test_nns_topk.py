@@ -9,6 +9,7 @@ from repro.core.nns import (
     BIG,
     cosine_topk,
     fixed_radius_nns,
+    query_parallel_nns,
     sharded_fixed_radius_nns,
 )
 from repro.core.topk import threshold_topk
@@ -144,6 +145,95 @@ def test_sharded_composes_with_streaming(key):
     shard = sharded_fixed_radius_nns(mesh, "model", q, sigs, radius=25,
                                      max_candidates=16, scan_block=17)
     _assert_same_result(local, shard)
+
+
+def test_query_parallel_matches_local(key):
+    """Query-sharded scan (db replicated) == the plain local scan exactly,
+    for dense and streaming plans."""
+    mesh = jax.make_mesh((1,), ("qp",))
+    _, sigs = _sigs(key, 80)
+    q = sigs[:5]
+    for scan_block in (0, 13, None):
+        local = fixed_radius_nns(q, sigs, radius=25, max_candidates=16,
+                                 scan_block=scan_block)
+        par = query_parallel_nns(mesh, "qp", q, sigs, radius=25,
+                                 max_candidates=16, scan_block=scan_block)
+        _assert_same_result(local, par)
+
+
+def test_query_parallel_respects_n_valid(key):
+    mesh = jax.make_mesh((1,), ("qp",))
+    _, sigs = _sigs(key, 64)
+    local = fixed_radius_nns(sigs[:3], sigs, radius=25, max_candidates=8,
+                             scan_block=16, n_valid=41)
+    par = query_parallel_nns(mesh, "qp", sigs[:3], sigs, radius=25,
+                             max_candidates=8, scan_block=16, n_valid=41)
+    _assert_same_result(local, par)
+    assert (np.asarray(par.indices) < 41).all()
+
+
+def test_sharded_composes_with_query_axis(key):
+    """(query block x bank) 2D partition == the plain local scan."""
+    mesh = jax.make_mesh((1, 1), ("qp", "model"))
+    _, sigs = _sigs(key, 96)
+    q = sigs[:5]
+    local = fixed_radius_nns(q, sigs, radius=25, max_candidates=16,
+                             scan_block=0)
+    both = sharded_fixed_radius_nns(mesh, "model", q, sigs, radius=25,
+                                    max_candidates=16, scan_block=17,
+                                    query_axis="qp")
+    _assert_same_result(local, both)
+
+
+@pytest.mark.slow
+def test_query_parallel_multi_device_subprocess():
+    """Real 8-fake-device run: query axis 4 x bank axis 2, query count not
+    divisible by the query axis (pad rows sliced off), vs the local scan."""
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.nns import (fixed_radius_nns, query_parallel_nns,
+                                    sharded_fixed_radius_nns)
+        rng = np.random.default_rng(0)
+        sigs = jnp.asarray(rng.integers(0, 2**32, (256, 8), dtype=np.uint32))
+        q = sigs[:10]  # 10 % 4 != 0: exercises query padding
+        local = fixed_radius_nns(q, sigs, radius=100, max_candidates=16,
+                                 scan_block=0)
+        mesh = jax.make_mesh((4,), ("qp",))
+        par = query_parallel_nns(mesh, "qp", q, sigs, radius=100,
+                                 max_candidates=16, scan_block=32)
+        mesh2 = jax.make_mesh((4, 2), ("qp", "banks"))
+        both = sharded_fixed_radius_nns(mesh2, "banks", q, sigs, radius=100,
+                                        max_candidates=16, scan_block=32,
+                                        query_axis="qp")
+        for got in (par, both):
+            np.testing.assert_array_equal(np.asarray(local.indices),
+                                          np.asarray(got.indices))
+            np.testing.assert_array_equal(np.asarray(local.distances),
+                                          np.asarray(got.distances))
+            np.testing.assert_array_equal(np.asarray(local.counts),
+                                          np.asarray(got.counts))
+        print("MARKER qp ok", jax.device_count())
+    """)
+    import os
+    import pathlib
+
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=420, cwd=repo,
+        env={"PYTHONPATH": str(repo / "src"),
+             "HOME": os.environ.get("HOME", str(repo)),
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-3000:]
+    assert "MARKER qp ok 8" in out.stdout
 
 
 def test_cosine_topk_oracle(key):

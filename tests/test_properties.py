@@ -17,6 +17,13 @@ from repro.core.quantization import (
 )
 from repro.core.topk import threshold_topk
 from repro.kernels.ref import hamming_distance_ref
+from repro.kernels.streaming_nns import (
+    big_key,
+    key_shift,
+    max_streamable_items,
+    pack_key,
+    unpack_key,
+)
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -108,6 +115,77 @@ def test_streaming_nns_equals_dense_property(n, q, radius, k, scan_block, seed):
         np.asarray(dense.distances), np.asarray(stream.distances))
     np.testing.assert_array_equal(
         np.asarray(dense.counts), np.asarray(stream.counts))
+
+
+# ---------------------------------------------------------------------------
+# streaming-NNS packed-key encoding (kernels/streaming_nns.py)
+# ---------------------------------------------------------------------------
+_WORDS = st.integers(1, 8)
+
+
+@st.composite
+def _key_pairs(draw):
+    """(words, dist, row) with row hitting the capacity boundaries often."""
+    words = draw(_WORDS)
+    cap = max_streamable_items(words)
+    dist = draw(st.integers(0, 32 * words))
+    row = draw(st.one_of(
+        st.integers(0, cap - 1),
+        st.sampled_from([0, 1, cap // 2, cap - 2, cap - 1])))
+    return words, dist, row
+
+
+@given(_key_pairs())
+def test_key_roundtrip_and_sentinel(pair):
+    """pack/unpack round-trips exactly and every valid key is < big_key —
+    including the boundary rows 0 and capacity-1 (2**22-1 at words=8)."""
+    words, dist, row = pair
+    key = pack_key(dist, row, words)
+    assert unpack_key(key, words) == (dist, row)
+    assert 0 <= key < big_key(words)
+    assert key < 2**31  # stays an int32
+
+
+@given(_key_pairs(), _key_pairs())
+def test_key_total_order_matches_lexicographic(a, b):
+    """key(a) < key(b) iff (dist, row)_a < (dist, row)_b — the packed int32
+    compare IS the dense path's (distance, index) tie-break order."""
+    hypothesis.assume(a[0] == b[0])  # same words -> same encoding
+    words, da, ra = a
+    _, db_, rb = b
+    assert (pack_key(da, ra, words) < pack_key(db_, rb, words)) == (
+        (da, ra) < (db_, rb))
+
+
+@given(
+    n=st.integers(2, 220),
+    q=st.integers(1, 3),
+    radius=st.integers(0, 64),
+    k=st.integers(1, 24),
+    scan_block=st.integers(1, 96),
+    superblock=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_streaming_superblocks_equal_dense_property(n, q, radius, k,
+                                                    scan_block, superblock,
+                                                    seed):
+    """Wide-key invariant: any superblock split (degenerate 1-row
+    superblocks included) x any scan_block must return the identical
+    NNSResult to the dense path — shard-offset edges, cross-superblock
+    distance ties, and buffer overflow all land in this space."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**32, size=(n, 2), dtype=np.uint32))
+    queries = jnp.asarray(
+        rng.integers(0, 2**32, size=(q, 2), dtype=np.uint32))
+    dense = fixed_radius_nns(queries, codes, radius, k, scan_block=0)
+    wide = fixed_radius_nns(queries, codes, radius, k, scan_block=scan_block,
+                            superblock=superblock)
+    np.testing.assert_array_equal(
+        np.asarray(dense.indices), np.asarray(wide.indices))
+    np.testing.assert_array_equal(
+        np.asarray(dense.distances), np.asarray(wide.distances))
+    np.testing.assert_array_equal(
+        np.asarray(dense.counts), np.asarray(wide.counts))
 
 
 @given(
