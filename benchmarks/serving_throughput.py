@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.data import synthetic
+from repro.data.synthetic import serving_queries as _queries
 from repro.models import recsys as rs
 from repro.serving import MicroBatcher, RecSysEngine
 
@@ -43,10 +44,6 @@ def _setup(n_users=2000, n_items=1200, history_len=12, hot_rows=256):
     return engine, data, params, cfg, freqs
 
 
-def _queries(data, idx):
-    return [{**{k: v[i] for k, v in data.user_feats.items()},
-             "history": data.histories[i], "genre": data.genres[i]}
-            for i in idx]
 
 
 def _measure_qps(engine, data, batch: int, n_queries: int) -> tuple[float, float]:

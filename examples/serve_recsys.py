@@ -6,7 +6,14 @@ Reports measured software throughput, the hot-cache hit rate, and the
 hardware cost model's per-query latency/energy (the 22,025 qps / 16.8x /
 713x headline numbers).
 
+`--pipeline` serves the same stream through the pipelined `AsyncServer`
+instead: buckets dispatch through the staged lookup -> scan -> rank steps
+onto a ring of in-flight batches, overlapping host-side batching with the
+device's NNS scan (bit-identical results; see docs/ARCHITECTURE.md and
+benchmarks/async_serving.py for the measured speedup).
+
   PYTHONPATH=src python examples/serve_recsys.py [--queries 2000]
+      [--pipeline] [--depth 2]
 """
 import argparse
 import time
@@ -15,7 +22,7 @@ import numpy as np
 
 from repro.core import cost_model as cm
 from repro.data import synthetic
-from repro.serving import MicroBatcher, RecSysEngine
+from repro.serving import AsyncServer, MicroBatcher, RecSysEngine
 from examples.train_recsys import train
 
 
@@ -27,6 +34,10 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--hot-rows", type=int, default=128)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="serve through the pipelined AsyncServer ring")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="in-flight ring depth (with --pipeline)")
     args = ap.parse_args()
 
     data = synthetic.make_movielens(n_users=args.users, n_items=args.items)
@@ -37,7 +48,11 @@ def main():
     engine = RecSysEngine.build(params, cfg, radius=112, n_candidates=50,
                                 top_k=10, hot_rows=args.hot_rows,
                                 item_freqs=freqs)
-    batcher = MicroBatcher(engine, max_batch=args.batch)
+    if args.pipeline:
+        batcher = AsyncServer(engine, max_batch=args.batch, depth=args.depth)
+        print(f"== pipelined serving (ring depth {args.depth}) ==")
+    else:
+        batcher = MicroBatcher(engine, max_batch=args.batch)
 
     rng = np.random.default_rng(0)
 

@@ -78,7 +78,27 @@ def fixed_radius_nns(
     n_valid: jax.Array | int | None = None,  # rows >= n_valid never match
     superblock: int | None = None,  # streaming superblock rows (testing knob)
 ) -> NNSResult:
-    """All db items with hamming(query, item) <= radius (bounded, sorted)."""
+    """All db items within Hamming `radius` of each query (bounded, sorted).
+
+    Args:
+      query_sigs / db_sigs: (q, words) / (n, words) packed uint32 LSH
+        signatures (words=8 for the paper's 256-bit signatures).
+      radius: fixed match radius (the TCAM threshold), static.
+      max_candidates: bounded candidate-set size K; output columns.
+      db_mask: optional (n,) bool eligibility mask (dense plan only).
+      scan_block: execution plan — None auto-routes by DB size
+        (`STREAM_MIN_ITEMS`), 0 forces dense, >0 forces streaming with that
+        chunk. Both plans return bit-identical results.
+      n_valid: prefix count of real rows; rows >= n_valid never match
+        (may be a traced scalar — used by the sharded paths for padding).
+      superblock: streaming superblock size override (testing knob;
+        results are superblock-invariant).
+    Returns:
+      NNSResult of (q, K) indices (-1 padded), (q, K) distances (`BIG`
+      where invalid), and (q,) total within-radius counts. Candidates are
+      sorted by (distance, index) ascending — the exact dense
+      threshold + top-k order, whatever the execution plan.
+    """
     n, words = db_sigs.shape
     if scan_block is None:
         # beyond-capacity DBs stream as multiple superblocks, so size alone
@@ -121,6 +141,42 @@ def fixed_radius_nns(
         idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
         dist = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=int(BIG))
     return NNSResult(indices=idx, distances=dist, counts=counts)
+
+
+# pre-jitted entry for the scan: knobs that fix shapes/plans are static,
+# signatures and n_valid stay traced, so repeat calls at one batch shape
+# never retrace in the caller
+_fixed_radius_nns_jit = jax.jit(
+    fixed_radius_nns,
+    static_argnames=("radius", "max_candidates", "scan_block", "superblock"))
+
+
+def fixed_radius_nns_async(
+    query_sigs: jax.Array,  # (q, words) uint32
+    db_sigs: jax.Array,  # (n, words) uint32
+    radius: int,
+    max_candidates: int = 128,
+    db_mask: jax.Array | None = None,
+    *,
+    scan_block: int | None = None,
+    n_valid: jax.Array | int | None = None,
+    superblock: int | None = None,
+) -> NNSResult:
+    """Non-blocking filtering scan: dispatch and return device futures.
+
+    Same arguments and bit-identical results as `fixed_radius_nns`, but
+    the call never synchronizes with the host: it dispatches one pre-jitted
+    scan (dense or streaming per `scan_block`) and immediately returns an
+    `NNSResult` of in-flight device arrays. Callers overlap host work (or
+    further dispatches) with the scan and pay the sync only when they read
+    a result — e.g. `np.asarray(res.indices)` or `jax.block_until_ready`.
+    This is the entry the pipelined `serving.AsyncServer` pattern builds
+    on; use it directly when driving the scan outside an engine.
+    """
+    return _fixed_radius_nns_jit(
+        query_sigs, db_sigs, radius=radius, max_candidates=max_candidates,
+        db_mask=db_mask, scan_block=scan_block, n_valid=n_valid,
+        superblock=superblock)
 
 
 def _pad_queries_to_axis(mesh, query_axis, query_sigs):

@@ -76,6 +76,16 @@ def make_movielens(
     )
 
 
+def serving_queries(data: MovieLensSynth, idx) -> list[dict]:
+    """Single-user serving query dicts for users `idx` — the submit()
+    schema of `serving.MicroBatcher` / `AsyncServer` (user feature scalars
+    + history vector + genre). One definition so benchmarks and tests
+    can't drift from the batcher's expected query layout."""
+    return [{**{k: v[i] for k, v in data.user_feats.items()},
+             "history": data.histories[i], "genre": data.genres[i]}
+            for i in idx]
+
+
 def movielens_batches(data: MovieLensSynth, batch_size: int, n_steps: int,
                       seed: int = 1):
     """Training batch iterator for the filtering model."""

@@ -1,6 +1,9 @@
 """Serving: KV caches (bf16 / int8 — the paper's ET quantization applied to
 the per-session cache), prefill/decode steps, and the batched RecSys
-subsystem (micro-batching queue + hot-row cache + jitted serve step)."""
+subsystem (micro-batching queue + hot-row cache + jitted serve step, plus
+the pipelined `AsyncServer` that overlaps host-side batching with the
+in-flight NNS scan via the staged lookup/scan/rank steps)."""
+from repro.serving.async_server import AsyncServer
 from repro.serving.batcher import MicroBatcher, ServedQuery, default_buckets
 from repro.serving.hot_cache import (
     CacheStats,
@@ -14,11 +17,15 @@ from repro.serving.recsys_engine import (
     ServeResult,
     filter_step,
     hit_rate,
+    lookup_step,
+    rank_stage_step,
     rank_step,
+    scan_step,
     serve_step,
 )
 
 __all__ = [
+    "AsyncServer",
     "CacheStats",
     "HotRowCache",
     "MicroBatcher",
@@ -31,6 +38,9 @@ __all__ = [
     "default_buckets",
     "filter_step",
     "hit_rate",
+    "lookup_step",
+    "rank_stage_step",
     "rank_step",
+    "scan_step",
     "serve_step",
 ]

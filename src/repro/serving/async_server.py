@@ -1,0 +1,172 @@
+"""Pipelined (double-buffered) serving over the staged iMARS pipeline.
+
+iMARS's end-to-end win comes from keeping the filtering and ranking stages
+busy *simultaneously* (paper Fig. 3: the CMA banks scan while the crossbars
+rank the previous query's candidates). The synchronous `MicroBatcher` loses
+that overlap in software: each bucket is stacked on the host, served, and
+converted back to numpy before the next bucket is even assembled, so the
+host sits idle while the device scans and the device sits idle while the
+host stacks — the MicroRec/RecNMP observation that deployed RecSys latency
+hides in lookup/compute *serialization*, not in any single kernel.
+
+`AsyncServer` recovers the overlap with JAX async dispatch — no threads:
+
+  * each bucket is dispatched through the **staged** serve pipeline
+    (`lookup_step` -> `scan_step` -> `rank_stage_step`, the fused
+    `serve_step` split at its stage boundaries) and the resulting device
+    futures are pushed onto a small ring of in-flight buckets;
+  * nothing blocks until the ring holds `depth` buckets: while bucket i's
+    NNS scan runs on the device, the host is already stacking/padding
+    bucket i+1 and dispatching its lookup stage — double-buffering for
+    `depth=2`, deeper rings for burstier devices;
+  * results are materialized (the only host sync) when a bucket is retired
+    off the ring, so the numpy conversion + per-ticket fan-out of bucket i
+    also overlaps bucket i+1's device compute;
+  * the hot-cache accumulator is threaded through the donated stage steps
+    exactly like the synchronous path, so measured hit rates stay honest.
+
+**Query-mesh routing.** When the engine was sharded with a query axis
+(`RecSysEngine.shard(mesh, ..., query_axis=...)`), up to `coalesce` full
+buckets are concatenated into one routed super-batch per dispatch: the
+query-parallel `shard_map` splits its rows contiguously over the query
+axis, so concurrent buckets land on **disjoint query blocks** and scan the
+catalog in parallel instead of queueing behind each other. `coalesce`
+defaults to the query-axis size (1 — no coalescing — for unrouted
+engines) and can be forced for testing.
+
+Bit-for-bit contract (tested in tests/test_async_serving.py): pipelined
+serving returns exactly the items, scores, and cache counters the
+synchronous `MicroBatcher` returns for the same query stream — the ring,
+the stage split, and the routing are pure execution knobs.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.batcher import MicroBatcher, ServedQuery
+from repro.serving.recsys_engine import (
+    RecSysEngine,
+    lookup_step,
+    rank_stage_step,
+    scan_step,
+)
+
+
+class _InFlight(NamedTuple):
+    """One dispatched (possibly coalesced) bucket riding the ring."""
+
+    parts: tuple  # ((chunk, bucket), ...) — chunk = [(ticket, query), ...]
+    items: object  # (sum(buckets), top_k) device future
+    scores: object  # (sum(buckets), top_k) device future
+
+
+class AsyncServer(MicroBatcher):
+    """Pipelined micro-batching server over a `RecSysEngine`.
+
+    Drop-in for `MicroBatcher` (same submit/result/serve_many API, same
+    bucketing, same counters) with a ring of up to `depth` in-flight
+    buckets dispatched through the staged serve pipeline.
+
+    Args:
+      engine: the serving engine (local or sharded).
+      max_batch / buckets: bucketing, as `MicroBatcher`.
+      depth: in-flight ring size; 1 degenerates to synchronous serving,
+        2 (default) double-buffers host work against device compute.
+      coalesce: number of full buckets fused into one routed super-batch
+        per dispatch. Default: the engine's query-mesh axis size when
+        sharded with `query_axis=...`, else 1. Values > 1 route concurrent
+        buckets onto disjoint query blocks of the mesh.
+
+    Invariant: results bit-match the synchronous `MicroBatcher` for any
+    depth / coalesce / bucket mix (tested).
+    """
+
+    def __init__(self, engine: RecSysEngine, *, max_batch: int = 256,
+                 buckets: Sequence[int] | None = None, depth: int = 2,
+                 coalesce: int | None = None):
+        super().__init__(engine, max_batch=max_batch, buckets=buckets)
+        if depth < 1:
+            raise ValueError(f"ring depth must be >= 1, got {depth}")
+        if coalesce is None:
+            routed = (engine.nns_mesh is not None
+                      and engine.nns_query_axis is not None)
+            coalesce = (engine.nns_mesh.shape[engine.nns_query_axis]
+                        if routed else 1)
+        if coalesce < 1:
+            raise ValueError(f"coalesce must be >= 1, got {coalesce}")
+        self.depth = depth
+        self.coalesce = coalesce
+        self._ring: deque[_InFlight] = deque()
+
+    # ------------------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        """Dispatched-but-unretired buckets currently riding the ring."""
+        return len(self._ring)
+
+    def flush(self) -> None:
+        """Drain the queue, keeping up to `depth` buckets in flight.
+
+        Dispatches are non-blocking (JAX async dispatch); the only host
+        syncs are the retirements, each overlapped with the following
+        buckets' host prep and device compute. Returns with every pending
+        ticket's result materialized, like the synchronous flush.
+        """
+        while self._pending:
+            self._ring.append(self._dispatch(self._take_parts()))
+            while len(self._ring) >= self.depth:
+                self._retire()
+        while self._ring:
+            self._retire()
+
+    # ------------------------------------------------------------------
+    def _take_parts(self) -> list[tuple[list, int]]:
+        """Pop 1..coalesce chunks off the queue as (chunk, bucket) parts.
+
+        Only *full* `max_batch` chunks coalesce (so the set of compiled
+        super-batch shapes stays tiny); a short tail always ships alone in
+        its own pow2 bucket.
+        """
+        parts = []
+        while self._pending and len(parts) < self.coalesce:
+            chunk = self._pending[: self.max_batch]
+            if parts and len(chunk) < self.max_batch:
+                break  # tail chunk: dispatch separately
+            self._pending = self._pending[self.max_batch:]
+            bucket = next(b for b in self.buckets if b >= len(chunk))
+            parts.append((chunk, bucket))
+        return parts
+
+    def _dispatch(self, parts: list[tuple[list, int]]) -> _InFlight:
+        """Stack `parts` into one batch and dispatch the staged pipeline."""
+        stacked = [self._stack_np([q for _, q in chunk], bucket)
+                   for chunk, bucket in parts]
+        host = (stacked[0] if len(stacked) == 1 else
+                {k: np.concatenate([s[k] for s in stacked])
+                 for k in stacked[0]})
+        batch = {k: jnp.asarray(v) for k, v in host.items()}
+        u, pooled, self._stats = lookup_step(self.engine, batch, self._stats)
+        nns = scan_step(self.engine, u)
+        items, top, self._stats = rank_stage_step(
+            self.engine, batch, nns.indices, u, pooled, self._stats)
+        for chunk, bucket in parts:
+            self.n_served += len(chunk)
+            self.n_padded += bucket - len(chunk)
+            self.n_batches += 1
+        return _InFlight(parts=tuple(parts), items=items, scores=top.scores)
+
+    def _retire(self) -> None:
+        """Materialize the oldest in-flight bucket and fan out its results."""
+        inf = self._ring.popleft()
+        items = np.asarray(inf.items)  # the one host sync per bucket
+        scores = np.asarray(inf.scores)
+        row = 0
+        for chunk, bucket in inf.parts:
+            for j, (ticket, _) in enumerate(chunk):
+                self._results[ticket] = ServedQuery(
+                    items=items[row + j], scores=scores[row + j])
+            row += bucket

@@ -91,11 +91,17 @@ class MicroBatcher:
         return ticket
 
     def result(self, ticket: int) -> ServedQuery:
+        """Recommendations for `ticket` (flushes the queue if still pending).
+
+        Pops the result — each ticket can be redeemed exactly once.
+        """
         if ticket not in self._results:
             self.flush()
         return self._results.pop(ticket)
 
     def serve_many(self, queries: Sequence[dict]) -> list[ServedQuery]:
+        """Submit, flush, and collect: one ServedQuery per input query,
+        in submission order."""
         tickets = [self.submit(q) for q in queries]
         self.flush()
         return [self.result(t) for t in tickets]
@@ -119,13 +125,15 @@ class MicroBatcher:
             self.n_padded += bucket - len(chunk)
             self.n_batches += 1
 
-    def _stack(self, queries: list[dict], bucket: int) -> dict:
-        """Stack per-user queries into one padded (bucket, ...) batch.
+    def _stack_np(self, queries: list[dict], bucket: int) -> dict:
+        """Stack per-user queries into one padded (bucket, ...) host batch.
 
         Padding rows are INVALID queries: every id is -1, so they read zero
         rows and can never count as hot-cache lookups — even without the
         `valid` row mask (which still marks real queries so their results
-        are the ones handed back).
+        are the ones handed back). Returns numpy arrays so callers (the
+        pipelined `AsyncServer`) can concatenate several buckets into one
+        routed super-batch before the single device transfer.
         """
         n = len(queries)
         history_len = len(np.asarray(queries[0]["history"]))
@@ -139,7 +147,12 @@ class MicroBatcher:
         batch["history"][:n] = np.stack(
             [np.asarray(q["history"], np.int32) for q in queries])
         batch["valid"] = np.arange(bucket) < n
-        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        return batch
+
+    def _stack(self, queries: list[dict], bucket: int) -> dict:
+        """`_stack_np` placed on device: one padded (bucket, ...) batch."""
+        return {k: jax.numpy.asarray(v)
+                for k, v in self._stack_np(queries, bucket).items()}
 
     # ------------------------------------------------------------------
     @property

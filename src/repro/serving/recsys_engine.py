@@ -73,6 +73,28 @@ class ServeResult(NamedTuple):
     "cfg", "radius", "n_candidates", "top_k", "nns_mesh", "nns_axis",
     "scan_block", "nns_query_axis"))
 class RecSysEngine:
+    """The deployed iMARS pipeline as a jit-able pytree.
+
+    Array fields (quantized tables, LSH signatures, MLP params, hot-row
+    caches) are pytree leaves; scalar knobs are static jit metadata:
+
+      * ``radius`` / ``n_candidates`` / ``top_k`` — filtering-NNS radius,
+        bounded candidate-set size, and final recommendation count;
+      * ``scan_block`` — filtering-stage NNS execution plan: ``None`` routes
+        dense vs streaming automatically by catalog size, ``0`` forces the
+        dense (q, n) path, a positive value forces the streaming scan with
+        that chunk size. A pure execution knob: every plan serves
+        bit-identical results (tested);
+      * ``nns_mesh`` / ``nns_axis`` / ``nns_query_axis`` — set by
+        :meth:`shard`; route the NNS onto a device mesh (bank-sharded DB,
+        query-parallel blocks, or both). Also execution-only: sharded
+        serving bit-matches local serving.
+
+    Build with :meth:`build` (quantizes a trained YoutubeDNN), distribute
+    with :meth:`shard`, serve with :meth:`serve` / `MicroBatcher` /
+    `AsyncServer`.
+    """
+
     tables_q: dict  # name -> QuantizedTensor (int8 UIETs)
     item_table_q: QuantizedTensor  # int8 ItET
     genre_table_q: QuantizedTensor
@@ -175,7 +197,22 @@ class RecSysEngine:
         return top
 
     def serve(self, batch: dict) -> ServeResult:
-        """Full query pipeline; jitted; returns ServeResult."""
+        """Serve one padded batch through the full query pipeline.
+
+        Args:
+          batch: dict with one (B,) int32 array per user feature named in
+            ``cfg.user_features``, a (B, L) int32 ``history``, a (B,) int32
+            ``genre``, and optionally a (B,) bool ``valid`` row mask
+            (rows with ``valid=False`` — or with all ids -1 — are padding:
+            they read zero rows, never touch the hot-cache counters, and
+            their outputs are discarded by callers).
+        Returns:
+          ServeResult with (B, top_k) final item ids (-1 padded), the
+          per-candidate CTR top-k, the filtering-stage NNS candidates, the
+          per-query hardware cost model, and the hot-cache CacheStats for
+          this batch. One fused jitted step (`serve_step`); bit-identical
+          to running `lookup_step` -> `scan_step` -> `rank_stage_step`.
+        """
         items, top, nns, stats = serve_step(self, batch, CacheStats.zero())
         return ServeResult(items=items, topk=top, nns=nns,
                            cost=self.query_cost(), stats=stats)
@@ -245,6 +282,11 @@ def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
 
 
 def _filter_step(engine: RecSysEngine, batch: dict):
+    """Features + filtering NNS in one jitted call -> (NNSResult, stats).
+
+    The retrieval-only entry (`hit_rate` evaluation, filter-stage tests);
+    the serving path uses `serve_step` or the staged split instead.
+    """
     u, _, stats = _features(engine, batch)
     q_sigs = lsh_signature(u, engine.lsh_proj)
     return _nns(engine, q_sigs), stats
@@ -272,6 +314,11 @@ def _rank(engine: RecSysEngine, batch: dict, cand: jax.Array,
 
 
 def _rank_step(engine: RecSysEngine, batch: dict, cand: jax.Array):
+    """Rank externally-supplied candidates -> (TopKResult, stats).
+
+    Recomputes the user features for `batch`; use `rank_stage_step` with
+    the outputs of `lookup_step` to avoid the recompute when pipelining.
+    """
     u, pooled, stats = _features(engine, batch)
     top, st = _rank(engine, batch, cand, u, pooled)
     return top, stats + st
@@ -281,22 +328,65 @@ def _serve_step(engine: RecSysEngine, batch: dict, stats: CacheStats):
     """One fused serving step: features -> NNS -> rank -> final ids.
 
     `stats` is a running hot-cache hit accumulator; callers jit this with
-    the accumulator donated so it updates in place across batches.
+    the accumulator donated so it updates in place across batches. Composes
+    the three stage functions below, so the fused step and the pipelined
+    lookup/scan/rank split are the same computation by construction.
+    """
+    u, pooled, stats = _lookup_stage(engine, batch, stats)
+    nns = _scan_stage(engine, u)
+    final, top, stats = _rank_stage(engine, batch, nns.indices, u, pooled,
+                                    stats)
+    return final, top, nns, stats
+
+
+def _lookup_stage(engine: RecSysEngine, batch: dict, stats: CacheStats):
+    """Stage 1 — ET lookups + pooling + filtering DNN.
+
+    Returns (u, pooled, stats'): the user embedding, the pooled history
+    (both needed again by the ranking stage), and the donated hot-cache
+    accumulator advanced by this batch's feature lookups.
     """
     u, pooled, st = _features(engine, batch)
-    q_sigs = lsh_signature(u, engine.lsh_proj)
-    nns = _nns(engine, q_sigs)
-    top, st2 = _rank(engine, batch, nns.indices, u, pooled)
+    return u, pooled, stats + st
+
+
+def _scan_stage(engine: RecSysEngine, u: jax.Array) -> NNSResult:
+    """Stage 2 — the filtering NNS scan, given stage 1's user embedding.
+
+    LSH-signs `u` and runs the fixed-radius Hamming scan (dense, streaming,
+    bank-sharded, or query-parallel per the engine's knobs). Pure function
+    of (engine, u): no batch dict, no cache counters — so a caller can keep
+    bucket i's scan in flight while bucket i+1 runs `lookup_step`.
+    """
+    return _nns(engine, lsh_signature(u, engine.lsh_proj))
+
+
+def _rank_stage(engine: RecSysEngine, batch: dict, cand: jax.Array,
+                u: jax.Array, pooled: jax.Array, stats: CacheStats):
+    """Stage 3 — rank candidates and pick the final items.
+
+    Takes stage 1's (u, pooled) and stage 2's candidate ids; returns
+    (final_items, topk, stats') exactly like the tail of `serve_step`.
+    Composing the three stages bit-matches the fused step (tested).
+    """
+    top, st = _rank(engine, batch, cand, u, pooled)
     final = jnp.where(top.indices >= 0,
-                      jnp.take_along_axis(
-                          nns.indices, jnp.maximum(top.indices, 0), 1),
+                      jnp.take_along_axis(cand, jnp.maximum(top.indices, 0),
+                                          1),
                       -1)
-    return final, top, nns, stats + st + st2
+    return final, top, stats + st
 
 
 filter_step = jax.jit(_filter_step)
 rank_step = jax.jit(_rank_step)
 serve_step = jax.jit(_serve_step, donate_argnums=(2,))
+# the same pipeline split at its stage boundaries, for pipelined serving
+# (serving/async_server.py): lookup -> scan -> rank compose to exactly
+# serve_step, but each stage dispatches separately so a driver can overlap
+# host-side work (and the next bucket's lookup) with an in-flight scan.
+lookup_step = jax.jit(_lookup_stage, donate_argnums=(2,))
+scan_step = jax.jit(_scan_stage)
+rank_stage_step = jax.jit(_rank_stage, donate_argnums=(5,))
 
 
 def hit_rate(engine: RecSysEngine, data, batch_size: int = 256,

@@ -1,0 +1,94 @@
+"""Docs link/reference checker: docs can't silently rot.
+
+Scans the markdown docs (docs/*.md + ROADMAP.md) for
+
+  * relative markdown links — ``[text](path)`` with no URL scheme — which
+    must resolve to an existing file (anchors are stripped), and
+  * source-tree references — any token that looks like a repo path under a
+    known prefix (``src/``, ``tests/``, ``benchmarks/``, ``examples/``,
+    ``docs/``, ``tools/``, ``.github/``, or package-relative ``core/``,
+    ``kernels/``, ``serving/``, resolved under ``src/repro``) — which must
+    name an existing file or directory. ``path.py:symbol`` /
+    ``path.py:123`` suffixes are allowed and stripped.
+
+Exits non-zero listing every dangling reference. Run from the repo root:
+
+    python tools/check_docs.py [files...]
+
+CI runs this on every push (the `docs` step) and
+tests/test_docs.py runs it as a tier-1 test.
+"""
+from __future__ import annotations
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# top-level prefixes checked against the repo root
+_ROOT_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "docs/",
+                  "tools/", ".github/")
+# package-relative prefixes, resolved under src/repro (docs shorthand)
+_PKG_PREFIXES = ("core/", "kernels/", "serving/", "models/", "configs/",
+                 "launch/", "distributed/", "data/", "checkpoint/", "optim/")
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_PATH_TOKEN = re.compile(r"[A-Za-z0-9_./-]+")
+
+
+def _exists(rel: str) -> bool:
+    rel = rel.split("#", 1)[0]
+    # strip `path.py:symbol` / `path.py:123` suffixes
+    if ":" in rel:
+        rel = rel.split(":", 1)[0]
+    if not rel:
+        return True
+    return (REPO / rel).exists()
+
+
+def check_file(path: Path) -> list[str]:
+    """Dangling references in one markdown file, as readable messages."""
+    text = path.read_text()
+    resolved_path = path.resolve()
+    label = (str(resolved_path.relative_to(REPO))
+             if resolved_path.is_relative_to(REPO) else path.name)
+    problems = []
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith(("mailto:", "#")):
+            continue
+        resolved = (path.parent / target.split("#", 1)[0]).resolve()
+        if not resolved.exists():
+            problems.append(f"{label}: dead link ({target})")
+    for token in _PATH_TOKEN.findall(text):
+        token = token.rstrip(".,;")
+        if token.startswith(_ROOT_PREFIXES):
+            if not _exists(token):
+                problems.append(f"{label}: missing path ({token})")
+        elif token.startswith(_PKG_PREFIXES) and "." in token:
+            # package shorthand: only flag file-looking tokens (with an
+            # extension) to avoid matching prose like "core/ banks"
+            if not _exists(f"src/repro/{token}"):
+                problems.append(
+                    f"{label}: missing src/repro path ({token})")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    files = ([Path(a) for a in argv] if argv else
+             [Path(p) for p in sorted(glob.glob(str(REPO / "docs" / "*.md")))]
+             + [REPO / "ROADMAP.md"])
+    problems = []
+    for f in files:
+        problems += check_file(f)
+    for p in problems:
+        print(f"DANGLING {p}")
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not problems else f'{len(problems)} dangling refs'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
