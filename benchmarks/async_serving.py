@@ -29,15 +29,33 @@ dominates exactly as it does at production scale.
 
   PYTHONPATH=src python -m benchmarks.async_serving
       [--batch 256] [--queries 2048] [--items 16384] [--scan-block 4096]
-      [--depth 2] [--devices 2] [--wave 1024]
+      [--depth 2] [--devices 2] [--wave 1024] [--repeats 2]
 
-Emits BENCH_async_serving.json (see benchmarks/bench_io.py).
+Variance control (this host is a noisy 2-core container): unless the
+caller already set it, ``--xla_cpu_multi_thread_eigen=false`` is appended
+to XLA_FLAGS before jax loads (Eigen's intra-op thread pool thrashing the
+2 cores was the dominant run-to-run jitter), and every server is measured
+``--repeats`` times with the best run reported — the first measured pass
+doubles as a thermal/allocator warmup on top of the compile-off-the-clock
+wave. Emits BENCH_async_serving.json (see benchmarks/bench_io.py).
 """
 from __future__ import annotations
 
 import argparse
 import os
 import time
+
+
+def _default_xla_cpu_flags() -> None:
+    """Append the Eigen single-thread flag unless the caller chose one.
+
+    Must run before the first jax import; both this benchmark's main() and
+    benchmarks/catalog_churn.py call it first thing.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_cpu_multi_thread_eigen" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_cpu_multi_thread_eigen=false").strip()
 
 
 def _setup(n_items: int, scan_block: int | None, history_len: int = 12,
@@ -86,7 +104,8 @@ def _measure(server, queries, wave: int):
 
 
 def rows(batch: int, n_queries: int, n_items: int, depth: int,
-         n_devices: int, wave: int, scan_block: int | None):
+         n_devices: int, wave: int, scan_block: int | None,
+         repeats: int = 2):
     import jax
     import numpy as np
 
@@ -114,7 +133,11 @@ def rows(batch: int, n_queries: int, n_items: int, depth: int,
     out, qps, base_items = [], {}, None
     for name, server in servers:
         server.serve_many(warm)  # compile every wave shape off the clock
-        q, p50, p99, items = _measure(server, queries, wave)
+        # best of `repeats` measured passes: run 1 doubles as warmup, the
+        # best run is the least-preempted one on this noisy 2-core host
+        q, p50, p99, items = max(
+            (_measure(server, queries, wave) for _ in range(max(repeats, 1))),
+            key=lambda r: r[0])
         qps[name] = q
         if base_items is None:
             base_items = items
@@ -150,8 +173,12 @@ def main():
                          "(set before jax import; 1 disables routing)")
     ap.add_argument("--wave", type=int, default=1024,
                     help="queries submitted per serve_many call")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="measured passes per server (first doubles as "
+                         "warmup; best pass reported)")
     args = ap.parse_args()
 
+    _default_xla_cpu_flags()  # must precede the first jax import
     if args.devices > 1:  # must precede the first jax import
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
@@ -160,7 +187,7 @@ def main():
     from benchmarks.bench_io import csv_rows_to_json, write_bench_json
 
     out = rows(args.batch, args.queries, args.items, args.depth,
-               args.devices, args.wave, args.scan_block)
+               args.devices, args.wave, args.scan_block, args.repeats)
     for name, us, derived in out:
         print(f"{name},{us:.6f},{derived}")
     path = write_bench_json(
@@ -168,7 +195,7 @@ def main():
         config={"batch": args.batch, "queries": args.queries,
                 "items": args.items, "scan_block": args.scan_block,
                 "depth": args.depth, "devices": args.devices,
-                "wave": args.wave})
+                "wave": args.wave, "repeats": args.repeats})
     print(f"# wrote {path}")
 
 

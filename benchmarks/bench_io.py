@@ -6,20 +6,44 @@ across PRs can be diffed by tooling instead of parsed out of logs.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import os
 import platform
+import subprocess
 import time
 
 
+def git_sha() -> str | None:
+    """Commit sha of the benchmarked tree ($GITHUB_SHA in CI, else git)."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None  # provenance is best-effort; never lose the artifact
+
+
 def write_bench_json(name: str, rows: list[dict], **extra) -> str:
-    """Write BENCH_<name>.json with `rows` + host metadata; returns the path."""
+    """Write BENCH_<name>.json with `rows` + host metadata; returns the path.
+
+    Every artifact carries provenance (`git_sha`, `iso_time`) so perf
+    trajectories across PRs are attributable — `tools/bench_compare.py`
+    prints both sides' provenance when diffing.
+    """
     out_dir = os.environ.get("BENCH_OUT_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     payload = {
         "bench": name,
         "unix_time": int(time.time()),
+        "iso_time": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "git_sha": git_sha(),
         "host": {"platform": platform.platform(),
                  "python": platform.python_version()},
         "rows": rows,

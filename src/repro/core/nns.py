@@ -85,7 +85,8 @@ def fixed_radius_nns(
         signatures (words=8 for the paper's 256-bit signatures).
       radius: fixed match radius (the TCAM threshold), static.
       max_candidates: bounded candidate-set size K; output columns.
-      db_mask: optional (n,) bool eligibility mask (dense plan only).
+      db_mask: optional (n,) bool eligibility mask — rows where it is False
+        (live-catalog tombstones) never match on either plan.
       scan_block: execution plan — None auto-routes by DB size
         (`STREAM_MIN_ITEMS`), 0 forces dense, >0 forces streaming with that
         chunk. Both plans return bit-identical results.
@@ -102,23 +103,19 @@ def fixed_radius_nns(
     n, words = db_sigs.shape
     if scan_block is None:
         # beyond-capacity DBs stream as multiple superblocks, so size alone
-        # never forces the dense path
-        use_stream = db_mask is None and n >= STREAM_MIN_ITEMS
+        # never forces the dense path (and tombstone masks stream too)
+        use_stream = n >= STREAM_MIN_ITEMS
         block = DEFAULT_SCAN_BLOCK
     elif scan_block == 0:
         use_stream = False
     else:
-        if db_mask is not None:
-            raise ValueError(
-                "streaming NNS supports prefix masking via n_valid, "
-                "not an arbitrary db_mask")
         use_stream, block = True, scan_block
 
     if use_stream:
         indices, distances, counts = ops.streaming_nns(
             query_sigs, db_sigs, radius=radius,
             max_candidates=max_candidates, scan_block=block, n_valid=n_valid,
-            superblock=superblock)
+            superblock=superblock, db_mask=db_mask)
         return NNSResult(indices=indices, distances=distances, counts=counts)
 
     d = ops.hamming_distances(query_sigs, db_sigs)  # (q, n)
@@ -212,6 +209,7 @@ def sharded_fixed_radius_nns(
     scan_block: int | None = None,  # forwarded to the per-shard scan
     query_axis: str | None = None,  # also shard queries over this mesh axis
     superblock: int | None = None,  # forwarded to the streaming scan
+    db_mask: jax.Array | None = None,  # (n,) bool, row-sharded like db_sigs
 ):
     """Fixed-radius NNS with the item DB sharded across the mesh.
 
@@ -221,7 +219,9 @@ def sharded_fixed_radius_nns(
     exactly like `fixed_radius_nns`, so sharding-over-devices composes with
     streaming-within-shard. Returned indices are global row ids. `n_valid`
     lets callers pad the DB to a multiple of the shard count without the pad
-    rows ever matching.
+    rows ever matching; `db_mask` (optional, padded to the same length as
+    `db_sigs` by the caller) additionally tombstones arbitrary rows — each
+    bank sees its slice of the mask.
 
     `query_axis` additionally blocks the *query* batch over a second mesh
     axis: each (query-block, bank) device pair scans independently and the
@@ -239,13 +239,13 @@ def sharded_fixed_radius_nns(
         query_sigs, q_pad = _pad_queries_to_axis(mesh, query_axis,
                                                  query_sigs)
 
-    def local_scan(q_local, db_local):
+    def local_scan(q_local, db_local, mask_local=None):
         shard = jax.lax.axis_index(axis)
         # prefix count of real (non-padding) rows within this shard
         local_valid = jnp.clip(n_valid - shard * per_shard, 0, per_shard)
         res = fixed_radius_nns(q_local, db_local, radius, local_k,
                                scan_block=scan_block, n_valid=local_valid,
-                               superblock=superblock)
+                               superblock=superblock, db_mask=mask_local)
         gidx = jnp.where(
             res.indices >= 0, res.indices + shard * per_shard, -1
         )
@@ -269,12 +269,20 @@ def sharded_fixed_radius_nns(
 
     q_spec = P(query_axis)  # P(None) == replicated when query_axis is None
     specs_in = (q_spec, P(axis, None))
+    args = (query_sigs, db_sigs)
+    if db_mask is not None:
+        if db_mask.shape[0] != n:
+            raise ValueError(
+                f"db_mask must be padded like db_sigs: {db_mask.shape[0]} "
+                f"!= {n}")
+        specs_in = (*specs_in, P(axis))
+        args = (*args, db_mask)
     specs_out = NNSResult(indices=q_spec, distances=q_spec, counts=q_spec)
     fn = shard_map(
         local_scan, mesh=mesh, in_specs=specs_in, out_specs=specs_out,
         check_vma=False,
     )
-    return _slice_query_pad(fn(query_sigs, db_sigs), q_pad)
+    return _slice_query_pad(fn(*args), q_pad)
 
 
 def query_parallel_nns(
@@ -288,6 +296,7 @@ def query_parallel_nns(
     scan_block: int | None = None,  # forwarded to the per-block scan
     n_valid: jax.Array | int | None = None,
     superblock: int | None = None,
+    db_mask: jax.Array | None = None,  # (n,) bool, replicated like db_sigs
 ):
     """Fixed-radius NNS with the QUERY batch sharded over `mesh[query_axis]`.
 
@@ -296,23 +305,128 @@ def query_parallel_nns(
     candidate gather at all, so it parallelizes the streaming scan across
     host/device cores at zero communication cost. Queries are padded to a
     multiple of the axis size; pad rows are sliced off the result.
+    `db_mask` tombstones rows and replicates with the catalog.
     """
     padded, pad = _pad_queries_to_axis(mesh, query_axis, query_sigs)
     nv = jnp.asarray(
         db_sigs.shape[0] if n_valid is None else n_valid, jnp.int32)
 
-    def local_scan(q_local, db_local, nv_local):
+    def local_scan(q_local, db_local, nv_local, mask_local=None):
         return fixed_radius_nns(q_local, db_local, radius, max_candidates,
                                 scan_block=scan_block, n_valid=nv_local,
-                                superblock=superblock)
+                                superblock=superblock, db_mask=mask_local)
 
     q_spec = P(query_axis)
+    specs_in = (q_spec, P(), P())
+    args = (padded, db_sigs, nv)
+    if db_mask is not None:
+        specs_in = (*specs_in, P())
+        args = (*args, db_mask)
     fn = shard_map(
-        local_scan, mesh=mesh, in_specs=(q_spec, P(), P()),
+        local_scan, mesh=mesh, in_specs=specs_in,
         out_specs=NNSResult(indices=q_spec, distances=q_spec, counts=q_spec),
         check_vma=False,
     )
-    return _slice_query_pad(fn(padded, db_sigs, nv), pad)
+    return _slice_query_pad(fn(*args), pad)
+
+
+# ---------------------------------------------------------------------------
+# Delta-aware NNS (live catalogs: read-only base + bounded delta shard)
+# ---------------------------------------------------------------------------
+# empty-delta-slot sentinel: sorts AFTER every real item id, so a delta shard
+# kept sorted-by-id has its live slots in a contiguous ascending prefix and
+# `searchsorted` membership probes stay valid (serving/catalog.py)
+EMPTY_ID = 2**31 - 1
+
+
+def delta_scan(
+    query_sigs: jax.Array,  # (q, words) uint32
+    delta_sigs: jax.Array,  # (D, words) uint32 — the delta shard signatures
+    delta_ids: jax.Array,  # (D,) int32 — global item id per slot, EMPTY_ID
+    radius: int,
+    max_candidates: int = 128,
+) -> NNSResult:
+    """Scan the delta shard; returned indices are GLOBAL item ids.
+
+    The shard is bounded (D rows), so the dense plan is always right.
+    Precondition (kept by `serving/catalog.py`): live slots are sorted by
+    item id — slot order == id order, so the bounded (distance, slot)
+    truncation selects exactly the entries a (distance, id) truncation
+    would, and the merge below stays bit-exact vs a from-scratch rebuild.
+    Empty slots (`EMPTY_ID`) never match and never count.
+    """
+    k = min(max_candidates, delta_sigs.shape[0])
+    res = fixed_radius_nns(query_sigs, delta_sigs, radius, k,
+                           db_mask=delta_ids != EMPTY_ID, scan_block=0)
+    gids = jnp.where(res.indices >= 0,
+                     delta_ids[jnp.maximum(res.indices, 0)], -1)
+    if k < max_candidates:
+        pad = max_candidates - k
+        gids = jnp.pad(gids, ((0, 0), (0, pad)), constant_values=-1)
+        dist = jnp.pad(res.distances, ((0, 0), (0, pad)),
+                       constant_values=int(BIG))
+        return NNSResult(indices=gids, distances=dist, counts=res.counts)
+    return NNSResult(indices=gids, distances=res.distances,
+                     counts=res.counts)
+
+
+def merge_delta_candidates(base: NNSResult, delta: NNSResult,
+                           max_candidates: int) -> NNSResult:
+    """Merge base-scan and delta-scan candidate buffers, bit-exactly.
+
+    Both buffers carry global item ids; an id appears in at most one of
+    them (a base row overwritten by a delta row is tombstoned out of the
+    base scan). The exact global order is lexicographic (distance, id) —
+    the dense rebuild order — which one stable distance sort alone cannot
+    recover from the concatenation, because delta ids (overwrites land
+    anywhere in the id space) interleave with base ids. So: pre-permute the
+    concatenated buffers into ascending-id order (one stable argsort on id,
+    invalid slots pushed to the end), then reuse
+    `kernels.streaming_nns.merge_candidate_buffers` — its stable sort on
+    distance now breaks ties by ascending id, reproducing the exact
+    (distance, id) order. Counts add (the id sets are disjoint).
+    """
+    from repro.kernels.streaming_nns import merge_candidate_buffers
+
+    ids = jnp.concatenate([base.indices, delta.indices], axis=1)
+    dist = jnp.concatenate([base.distances, delta.distances], axis=1)
+    order = jnp.argsort(jnp.where(ids < 0, jnp.int32(EMPTY_ID), ids),
+                        axis=-1, stable=True)
+    ids = jnp.take_along_axis(ids, order, axis=1)
+    dist = jnp.take_along_axis(dist, order, axis=1)
+    idx, d = merge_candidate_buffers(ids, dist, max_candidates)
+    return NNSResult(indices=idx, distances=d,
+                     counts=base.counts + delta.counts)
+
+
+def delta_aware_nns(
+    query_sigs: jax.Array,  # (q, words) uint32
+    db_sigs: jax.Array,  # (n, words) uint32 — read-only base epoch
+    delta_sigs: jax.Array,  # (D, words) uint32 — bounded delta shard
+    delta_ids: jax.Array,  # (D,) int32 — global ids, EMPTY_ID = free slot
+    radius: int,
+    max_candidates: int = 128,
+    *,
+    db_mask: jax.Array | None = None,  # (n,) bool — base tombstones
+    scan_block: int | None = None,
+    n_valid: jax.Array | int | None = None,
+    superblock: int | None = None,
+) -> NNSResult:
+    """Fixed-radius NNS over (read-only base) + (bounded delta shard).
+
+    The base scans with its usual execution plan (dense / streaming /
+    superblocked, with tombstoned rows masked), the delta scans dense, and
+    one `merge_candidate_buffers` reuse fuses the two bounded buffers —
+    results bit-match `fixed_radius_nns` over a from-scratch rebuilt table
+    (delta rows folded in, tombstones dropped). This is the serving entry
+    the live-catalog engine routes through while updates are pending.
+    """
+    base = fixed_radius_nns(query_sigs, db_sigs, radius, max_candidates,
+                            db_mask=db_mask, scan_block=scan_block,
+                            n_valid=n_valid, superblock=superblock)
+    delta = delta_scan(query_sigs, delta_sigs, delta_ids, radius,
+                       max_candidates)
+    return merge_delta_candidates(base, delta, max_candidates)
 
 
 # ---------------------------------------------------------------------------

@@ -118,10 +118,10 @@ def _flash_attention_pallas(q, k, v, *, causal=True, scale=None, interpret):
 
 
 def _streaming_nns_ref(queries, db, *, radius, max_candidates, scan_block,
-                       n_valid, superblock=None):
+                       n_valid, superblock=None, db_mask=None):
     return ref.streaming_nns_ref(
         queries, db, radius, max_candidates, scan_block=scan_block,
-        n_valid=n_valid, superblock=superblock)
+        n_valid=n_valid, superblock=superblock, db_mask=db_mask)
 
 
 # the kernel's rank-select merge materializes an (block_q, m, m) compare with
@@ -134,7 +134,7 @@ _STREAM_PALLAS_MAX_BLOCK_N = 512
 
 
 def _streaming_nns_pallas(queries, db, *, radius, max_candidates, scan_block,
-                          n_valid, superblock=None, interpret):
+                          n_valid, superblock=None, db_mask=None, interpret):
     limit = db.shape[0] if n_valid is None else n_valid
     block_n = min(max(128, round_up(scan_block, 128)),
                   _STREAM_PALLAS_MAX_BLOCK_N)
@@ -146,7 +146,7 @@ def _streaming_nns_pallas(queries, db, *, radius, max_candidates, scan_block,
         superblock = max(128, round_up(superblock, 128))
         block_n = math.gcd(block_n, superblock)
     return streaming_nns_pallas(
-        queries, db, jnp.asarray(limit, jnp.int32), radius=radius,
+        queries, db, jnp.asarray(limit, jnp.int32), db_mask, radius=radius,
         max_candidates=max_candidates, block_n=block_n,
         superblock=superblock, interpret=interpret)
 
@@ -177,7 +177,8 @@ def hamming_distances(queries, db):
 
 
 def streaming_nns(queries, db, *, radius, max_candidates,
-                  scan_block=4096, n_valid=None, superblock=None):
+                  scan_block=4096, n_valid=None, superblock=None,
+                  db_mask=None):
     """Streaming fixed-radius NNS over the full DB, O(q*max_candidates) mem.
 
     Returns (indices, distances, counts) bit-matching the dense
@@ -186,11 +187,13 @@ def streaming_nns(queries, db, *, radius, max_candidates,
     DBs beyond the packed-key capacity (4.19M rows at 256-bit signatures)
     scan as multiple superblocks transparently; `superblock` shrinks the
     superblock size below capacity (a pure execution knob for tests —
-    results are superblock-invariant).
+    results are superblock-invariant). `db_mask` ((n,) bool, optional)
+    marks per-row eligibility — the tombstone mask of the live-catalog
+    layer; False rows never match and never count.
     """
     return dispatch("streaming_nns", queries, db, radius=radius,
                     max_candidates=max_candidates, scan_block=scan_block,
-                    n_valid=n_valid, superblock=superblock)
+                    n_valid=n_valid, superblock=superblock, db_mask=db_mask)
 
 
 def int8_matmul(x, w, x_scale, w_scale):

@@ -63,6 +63,7 @@ def streaming_nns_ref(
     scan_block: int = 4096,
     n_valid: jax.Array | int | None = None,
     superblock: int | None = None,  # rows per superblock (testing override)
+    db_mask: jax.Array | None = None,  # (n,) bool — 0/False rows never match
 ):
     """`lax.scan`-chunked streaming NNS oracle, O(q * max_candidates) memory.
 
@@ -78,7 +79,9 @@ def streaming_nns_ref(
     bits hold superblock-local offsets; global ids are reconstructed from
     the superblock offset and the per-superblock top-K buffers are merged
     with one stable sort on distance (`merge_candidate_buffers`). No row
-    cap remains beyond int32 indexing.
+    cap remains beyond int32 indexing. `db_mask` mirrors the kernel's
+    optional row-eligibility operand (live-catalog tombstones): masked
+    rows never match and never count.
     """
     q, words = queries.shape
     n = db.shape[0]
@@ -88,7 +91,7 @@ def streaming_nns_ref(
     limit = jnp.minimum(
         jnp.asarray(n if n_valid is None else n_valid, jnp.int32), n)
 
-    def scan_superblock(db_s, limit_s):
+    def scan_superblock(db_s, limit_s, mask_s):
         """One packed-key lax.scan over <= sb_rows rows -> ((q, K), (q,))."""
         n_s = db_s.shape[0]
         # chunks never need to exceed the superblock: an oversized
@@ -99,13 +102,19 @@ def streaming_nns_ref(
         pad = n_blocks * block - n_s
         db_p = jnp.pad(db_s, ((0, pad), (0, 0))) if pad else db_s
         blocks = db_p.reshape(n_blocks, block, words)
+        if mask_s is None:
+            mask_blocks = jnp.ones((n_blocks, 1), jnp.bool_)  # broadcast no-op
+        else:
+            mask_p = jnp.pad(mask_s, (0, pad)) if pad else mask_s
+            mask_blocks = mask_p.reshape(n_blocks, block).astype(jnp.bool_)
 
         def step(carry, blk):
             keys, counts = carry
-            db_blk, j = blk
+            db_blk, mask_blk, j = blk
             d = hamming_distance_ref(queries, db_blk)  # (q, block)
             lidx = j * block + jnp.arange(block, dtype=jnp.int32)
             within = jnp.logical_and(d <= radius, (lidx < limit_s)[None, :])
+            within = jnp.logical_and(within, mask_blk[None, :])
             counts = counts + jnp.sum(within, axis=-1).astype(jnp.int32)
             new_keys = jnp.where(
                 within, pack_key(d, lidx[None, :], words), big)
@@ -117,7 +126,7 @@ def streaming_nns_ref(
         counts0 = jnp.zeros((q,), jnp.int32)
         (keys, counts), _ = jax.lax.scan(
             step, (keys0, counts0),
-            (blocks, jnp.arange(n_blocks, dtype=jnp.int32)))
+            (blocks, mask_blocks, jnp.arange(n_blocks, dtype=jnp.int32)))
         return keys, counts
 
     all_idx, all_dist = [], []
@@ -125,7 +134,8 @@ def streaming_nns_ref(
     for off in range(0, max(n, 1), sb_rows):
         db_s = db[off:off + sb_rows]
         keys, cnt = scan_superblock(
-            db_s, jnp.clip(limit - off, 0, db_s.shape[0]))
+            db_s, jnp.clip(limit - off, 0, db_s.shape[0]),
+            None if db_mask is None else db_mask[off:off + sb_rows])
         dist, local = unpack_key(keys, words)
         valid = keys < big
         all_idx.append(jnp.where(valid, local + off, -1))

@@ -48,6 +48,16 @@ blocks and stays resident in VMEM, the same accumulator pattern as the
 embedding-pool kernel; it re-initializes when the scan crosses into the next
 superblock. `n_valid` rides along as a dynamic (1, 1) scalar operand so the
 sharded path can mask per-shard padding rows with a traced value.
+
+**Row eligibility (`db_mask`).** The live-catalog layer (serving/catalog.py)
+tombstones base rows that were deleted or overwritten by a delta row; those
+rows must never match, wherever they sit in the DB — a prefix count
+(`n_valid`) cannot express that. An optional (1, n) int32 mask operand rides
+the scan blocked along the DB dimension exactly like the signature rows
+((1, block_n) lane-aligned tiles, zero-padded past `n`): the matchline AND
+is one extra elementwise compare per block, so masked and unmasked scans
+cost the same. When no mask is passed the operand is omitted entirely (a
+separate pallas_call signature), so frozen catalogs pay nothing.
 """
 from __future__ import annotations
 
@@ -131,7 +141,8 @@ def merge_candidate_buffers(indices: jax.Array, distances: jax.Array,
 
 
 def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
-                          *, radius, shift, big, blocks_per_sb):
+                          *, radius, shift, big, blocks_per_sb,
+                          mask_ref=None):
     j = pl.program_id(1)
 
     @pl.when(j % blocks_per_sb == 0)
@@ -150,6 +161,8 @@ def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
     iota = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
     gidx = j * block_n + iota  # global row id (int32-safe up to 2**31 rows)
     within = jnp.logical_and(d <= radius, gidx < limit_ref[0, 0])
+    if mask_ref is not None:  # tombstoned rows never match (matchline AND)
+        within = jnp.logical_and(within, (mask_ref[...] != 0)[0][None, :])
     counts_ref[...] += jnp.sum(within.astype(jnp.int32), axis=1, keepdims=True)
 
     @pl.when(jnp.any(within))
@@ -171,6 +184,13 @@ def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
             jnp.where(take, merged[..., None], big), axis=1)
 
 
+def _masked_streaming_nns_kernel(limit_ref, q_ref, db_ref, mask_ref,
+                                 keys_ref, counts_ref, **kw):
+    """Mask-carrying variant: same body, one extra (1, block_n) operand."""
+    _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
+                          mask_ref=mask_ref, **kw)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("radius", "max_candidates", "block_q", "block_n",
@@ -180,6 +200,7 @@ def streaming_nns_pallas(
     queries: jax.Array,  # (q, words) uint32
     db: jax.Array,  # (n, words) uint32
     n_valid: jax.Array,  # () int32 — rows >= n_valid never match (dynamic)
+    db_mask: jax.Array | None = None,  # (n,) bool/int — 0 rows never match
     *,
     radius: int,
     max_candidates: int,
@@ -195,6 +216,8 @@ def streaming_nns_pallas(
     padded with (-1, BIG_DIST); counts are total matches within radius.
     DBs larger than the packed-key capacity scan as multiple superblocks
     whose candidate buffers are merged host-side (see module docstring).
+    `db_mask` marks per-row eligibility (tombstones); None scans unmasked
+    through a mask-free kernel signature.
     """
     q, words = queries.shape
     n, words2 = db.shape
@@ -215,17 +238,28 @@ def streaming_nns_pallas(
     limit = jnp.reshape(
         jnp.minimum(jnp.asarray(n_valid, jnp.int32), n), (1, 1))
 
+    operands = [limit, queries_p, db_p]
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        pl.BlockSpec((block_q, words), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_n, words), lambda i, j: (j, 0)),
+    ]
+    body = (_streaming_nns_kernel if db_mask is None
+            else _masked_streaming_nns_kernel)
+    if db_mask is not None:
+        mask = jnp.reshape(db_mask.astype(jnp.int32), (1, n))
+        if np_ > n:  # pad rows ineligible (n_valid already excludes them)
+            mask = jnp.pad(mask, ((0, 0), (0, np_ - n)))
+        operands.append(mask)
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j: (0, j)))
+
     kernel = functools.partial(
-        _streaming_nns_kernel, radius=radius, shift=shift, big=big,
+        body, radius=radius, shift=shift, big=big,
         blocks_per_sb=blocks_per_sb)
     keys, counts = pl.pallas_call(
         kernel,
         grid=(qp // block_q, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            pl.BlockSpec((block_q, words), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, words), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, block_q, k_pad),
                          lambda i, j: (j // blocks_per_sb, i, 0)),
@@ -236,7 +270,7 @@ def streaming_nns_pallas(
             jax.ShapeDtypeStruct((qp, 1), jnp.int32),
         ),
         interpret=interpret,
-    )(limit, queries_p, db_p)
+    )(*operands)
 
     # buffers are sorted: first K slots of each superblock = its best K
     keys = keys[:, :q, :max_candidates]  # (n_sb, q, K)

@@ -2,15 +2,30 @@
 the per-session cache), prefill/decode steps, and the batched RecSys
 subsystem (micro-batching queue + hot-row cache + jitted serve step, plus
 the pipelined `AsyncServer` that overlaps host-side batching with the
-in-flight NNS scan via the staged lookup/scan/rank steps)."""
+in-flight NNS scan via the staged lookup/scan/rank steps, and the
+`LiveCatalog` versioned embedding store: bounded delta shard + tombstones
++ epoch compaction over a read-only base, serving bit-identically to a
+from-scratch rebuild while the catalog churns)."""
 from repro.serving.async_server import AsyncServer
 from repro.serving.batcher import MicroBatcher, ServedQuery, default_buckets
+from repro.serving.catalog import (
+    DeltaFullError,
+    DeltaShard,
+    LiveCatalog,
+    compact_engine,
+    empty_delta,
+    engine_apply_updates,
+    materialize,
+    rebuild_reference,
+)
 from repro.serving.hot_cache import (
     CacheStats,
     HotRowCache,
     build_hot_cache,
     cached_embedding_bag,
     cached_lookup,
+    invalidate_rows,
+    pin_rows,
 )
 from repro.serving.recsys_engine import (
     RecSysEngine,
@@ -27,7 +42,10 @@ from repro.serving.recsys_engine import (
 __all__ = [
     "AsyncServer",
     "CacheStats",
+    "DeltaFullError",
+    "DeltaShard",
     "HotRowCache",
+    "LiveCatalog",
     "MicroBatcher",
     "RecSysEngine",
     "ServeResult",
@@ -35,12 +53,19 @@ __all__ = [
     "build_hot_cache",
     "cached_embedding_bag",
     "cached_lookup",
+    "compact_engine",
     "default_buckets",
+    "empty_delta",
+    "engine_apply_updates",
     "filter_step",
     "hit_rate",
+    "invalidate_rows",
     "lookup_step",
+    "materialize",
+    "pin_rows",
     "rank_stage_step",
     "rank_step",
+    "rebuild_reference",
     "scan_step",
     "serve_step",
 ]

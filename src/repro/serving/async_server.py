@@ -38,6 +38,15 @@ Bit-for-bit contract (tested in tests/test_async_serving.py): pipelined
 serving returns exactly the items, scores, and cache counters the
 synchronous `MicroBatcher` returns for the same query stream — the ring,
 the stage split, and the routing are pure execution knobs.
+
+**Epoch-safe engine swap.** `swap_engine` (inherited from `MicroBatcher`,
+driven by `serving/catalog.py`'s `LiveCatalog._publish`) composes with the
+ring MVCC-style: a swap never touches in-flight entries — each ring entry
+holds device futures of the engine value it was dispatched against, so
+those buckets finish on the *old* epoch while every later dispatch serves
+the new one. A bucket is always entirely one epoch (asserted over whole
+streams in tests/test_catalog.py); counters and the donated hot-cache
+accumulator carry across the swap.
 """
 from __future__ import annotations
 

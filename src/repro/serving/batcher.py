@@ -83,6 +83,23 @@ class MicroBatcher:
         self.n_batches = 0
 
     # ------------------------------------------------------------------
+    def swap_engine(self, engine: RecSysEngine) -> None:
+        """Atomically swap to a new engine epoch/update view.
+
+        The live-catalog publication point (`catalog.LiveCatalog.attach`):
+        every bucket dispatched *after* the swap serves from `engine`;
+        buckets already dispatched (the `AsyncServer` in-flight ring) hold
+        device buffers of the old engine value and finish on that epoch —
+        a bucket is always entirely one epoch, never mixed. The hot-cache
+        hit accumulator and the served/padded counters carry over.
+        """
+        if tuple(sorted(engine.cfg.user_features.keys())) \
+                != self._feature_names:
+            raise ValueError("swap_engine: user-feature schema changed; "
+                             "start a new server instead")
+        self.engine = engine
+
+    # ------------------------------------------------------------------
     def submit(self, query: dict) -> int:
         """Enqueue one user query; returns a ticket for `result()`."""
         ticket = self._next_ticket

@@ -30,6 +30,11 @@ import numpy as np
 from repro.core.quantization import QuantizedTensor, dequantize_rowwise
 from repro.utils import pytree_dataclass
 
+# empty-slot sentinel for invalidated hot rows: sorts after every real item
+# id, so `hot_ids` stays ascending and the searchsorted probe stays valid
+# (same value as core.nns.EMPTY_ID, defined locally to keep layering flat)
+INVALID_ID = 2**31 - 1
+
 
 class CacheStats(NamedTuple):
     hits: jax.Array  # () int32 — ids served from the hot set
@@ -91,6 +96,59 @@ def build_hot_cache(table: QuantizedTensor, freqs=None,
     return HotRowCache(hot_ids=hot_ids, hot_rows=hot_rows, capacity=capacity)
 
 
+def pin_rows(table: QuantizedTensor, ids, capacity: int) -> HotRowCache:
+    """Pin exactly `ids` (unique item ids) into a capacity-`capacity` cache.
+
+    Slots beyond ``len(ids)`` are empty (`INVALID_ID` ids, zero rows). The
+    live-catalog reference rebuild uses this to reproduce a churned cache's
+    exact surviving hot set, so cache counters stay comparable bit-for-bit.
+    """
+    d = int(table.values.shape[1])
+    ids = np.sort(np.asarray(ids, np.int32))
+    capacity = max(int(capacity), 0)
+    if len(ids) > capacity:
+        raise ValueError(
+            f"pin_rows: {len(ids)} ids exceed capacity {capacity}")
+    if capacity == 0:
+        return HotRowCache(hot_ids=jnp.zeros((0,), jnp.int32),
+                           hot_rows=jnp.zeros((0, d), jnp.float32),
+                           capacity=0)
+    hot_ids = np.full(capacity, INVALID_ID, np.int32)
+    hot_ids[: len(ids)] = ids
+    rows = np.zeros((capacity, d), np.float32)
+    if len(ids):
+        rows[: len(ids)] = np.asarray(dequantize_rowwise(QuantizedTensor(
+            values=table.values[ids], scales=table.scales[ids])))
+    return HotRowCache(hot_ids=jnp.asarray(hot_ids),
+                       hot_rows=jnp.asarray(rows), capacity=capacity)
+
+
+def invalidate_rows(cache: HotRowCache | None, ids) -> HotRowCache | None:
+    """Evict `ids` from the hot set (live-catalog row invalidation).
+
+    Touched rows' pinned f32 images are stale the moment the backing table
+    row changes, so they must leave the hot set — everything else stays
+    pinned ("invalidated only for touched rows"). Evicted slots become
+    `INVALID_ID` / zero-row tails; `hot_ids` is re-sorted so the
+    searchsorted probe contract holds. Host-side (updates are host-driven);
+    a no-op returns the cache unchanged.
+    """
+    if cache is None or cache.capacity == 0:
+        return cache
+    ids = np.asarray(ids, np.int32).reshape(-1)
+    hot = np.asarray(cache.hot_ids).copy()
+    dead = np.isin(hot, ids)
+    if not dead.any():
+        return cache
+    hot[dead] = INVALID_ID
+    rows = np.asarray(cache.hot_rows).copy()
+    rows[dead] = 0.0
+    order = np.argsort(hot, kind="stable")
+    return HotRowCache(hot_ids=jnp.asarray(hot[order]),
+                       hot_rows=jnp.asarray(rows[order]),
+                       capacity=cache.capacity)
+
+
 def _probe(cache: HotRowCache, ids: jax.Array):
     """ids (...,) -> (hit mask (...,), position into hot_rows (...,))."""
     pos = jnp.searchsorted(cache.hot_ids, ids)
@@ -127,6 +185,25 @@ def cached_lookup(cache: HotRowCache | None, table: QuantizedTensor,
     return cached_rows(cache, table, ids)
 
 
+def pool_rows(rows: jax.Array, ids: jax.Array,
+              weights: jax.Array | None = None,
+              mode: str = "sum") -> jax.Array:
+    """THE pooling reduction: (B, L, d) rows + (B, L) ids -> (B, d).
+
+    One definition shared by the cached bag below and the delta-aware bag
+    in `serving/catalog.py` — the frozen-vs-live bit-match contract
+    requires the two poolings to stay op-for-op identical, so they must be
+    the same ops.
+    """
+    valid = (ids >= 0).astype(jnp.float32)
+    w = valid if weights is None else weights.astype(jnp.float32) * valid
+    pooled = jnp.einsum("bld,bl->bd", rows, w)
+    if mode == "mean":
+        count = jnp.sum(valid, axis=-1, keepdims=True)
+        pooled = pooled / jnp.maximum(count, 1.0)
+    return pooled
+
+
 def cached_embedding_bag(
     cache: HotRowCache | None,
     table: QuantizedTensor,
@@ -140,11 +217,5 @@ def cached_embedding_bag(
     kernel reference, over rows sourced from the hot set or the int8 path —
     identical inputs in identical order, so the result bit-matches.
     """
-    valid = (ids >= 0).astype(jnp.float32)
-    w = valid if weights is None else weights.astype(jnp.float32) * valid
     rows, stats = cached_rows(cache, table, ids)  # (B, L, d)
-    pooled = jnp.einsum("bld,bl->bd", rows, w)
-    if mode == "mean":
-        count = jnp.sum(valid, axis=-1, keepdims=True)
-        pooled = pooled / jnp.maximum(count, 1.0)
-    return pooled, stats
+    return pool_rows(rows, ids, weights, mode), stats

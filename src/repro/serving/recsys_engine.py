@@ -44,19 +44,24 @@ from repro.core.embedding import embedding_bag
 from repro.core.lsh import lsh_signature, make_lsh_projections
 from repro.core.nns import (
     NNSResult,
+    delta_scan,
     fixed_radius_nns,
+    merge_delta_candidates,
     query_parallel_nns,
     sharded_fixed_radius_nns,
 )
 from repro.core.quantization import QuantizedTensor, quantize_rowwise
 from repro.core.topk import TopKResult, threshold_topk
 from repro.models import recsys as rs
+from repro.serving.catalog import (
+    delta_cached_embedding_bag,
+    delta_cached_rows,
+)
 from repro.serving.hot_cache import (
     CacheStats,
     HotRowCache,
     build_hot_cache,
     cached_embedding_bag,
-    cached_lookup,
 )
 from repro.utils import FrozenMapping, pytree_dataclass
 
@@ -103,6 +108,12 @@ class RecSysEngine:
     lsh_proj: jax.Array
     item_hot: HotRowCache  # hot ItET rows (history pooling + ranking)
     uiet_hot: dict  # name -> HotRowCache for the user-feature ETs
+    # live-catalog state (serving/catalog.py): a bounded DeltaShard overlay
+    # of pending item updates + the base-row tombstone mask; None for a
+    # frozen engine (zero serving overhead). Both are pytree leaves, so
+    # epoch/update swaps never retrace the jitted serve steps.
+    delta: object = None  # catalog.DeltaShard | None
+    item_mask: jax.Array | None = None  # (n,) bool — alive base rows
     cfg: rs.YoutubeDNNConfig = None
     radius: int = 96
     n_candidates: int = 50
@@ -166,17 +177,51 @@ class RecSysEngine:
 
         if axis is None and query_axis is None:
             raise ValueError("shard() needs a db axis, a query_axis, or both")
-        sigs = self.item_sigs
+        sigs, mask = self.item_sigs, self.item_mask
         if axis is not None:
             n_shards = mesh.shape[axis]
             n = sigs.shape[0]
             pad = (-n) % n_shards
             sigs = jnp.pad(sigs, ((0, pad), (0, 0)))
             sigs = jax.device_put(sigs, NamedSharding(mesh, P(axis, None)))
+            if mask is not None:  # tombstones ride the banks (pad rows dead)
+                mask = jnp.pad(mask[: n], (0, pad))
+                mask = jax.device_put(mask, NamedSharding(mesh, P(axis)))
         kw = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
-        kw.update(item_sigs=sigs, nns_mesh=mesh, nns_axis=axis,
-                  nns_query_axis=query_axis)
+        kw.update(item_sigs=sigs, item_mask=mask, nns_mesh=mesh,
+                  nns_axis=axis, nns_query_axis=query_axis)
         return RecSysEngine(**kw)
+
+    # ------------------------------------------------------------------
+    # live-catalog plumbing (serving/catalog.py holds the mechanics)
+    # ------------------------------------------------------------------
+    def live(self, delta_capacity: int = 1024) -> "RecSysEngine":
+        """A live-catalog view of this engine: empty bounded delta shard +
+        all-alive tombstone mask (one-time treedef change; see
+        `catalog.ensure_live`). Usually reached via `catalog.LiveCatalog`.
+        """
+        from repro.serving.catalog import ensure_live
+
+        return ensure_live(self, delta_capacity)
+
+    def apply_updates(self, upsert_ids=None, upsert_rows=None,
+                      delete_ids=None) -> "RecSysEngine":
+        """New engine with the update batch folded into the delta shard
+        (upserts re-embed/extend, deletes tombstone; touched rows leave the
+        hot cache). The old engine value stays valid — callers swap
+        atomically between buckets. See `catalog.engine_apply_updates`."""
+        from repro.serving.catalog import engine_apply_updates
+
+        return engine_apply_updates(self, upsert_ids, upsert_rows,
+                                    delete_ids)
+
+    def compact(self) -> "RecSysEngine":
+        """New-epoch engine with the delta folded into a fresh read-only
+        base (sharded engines re-shard onto their mesh). The old epoch
+        stays serveable. See `catalog.compact_engine`."""
+        from repro.serving.catalog import compact_engine
+
+        return compact_engine(self)
 
     # ------------------------------------------------------------------
     # thin object API over the jitted pure functions below
@@ -251,9 +296,12 @@ def _features(engine: RecSysEngine, batch: dict):
             mask(batch[name][:, None]))
         feats.append(emb)
         stats = stats + st
-    pooled, st = cached_embedding_bag(
-        engine.item_hot, engine.item_table_q, mask(batch["history"]),
-        mode="mean")
+    # history pooling reads the ITEM table -> must see pending delta rows
+    # (a re-embedded item in someone's history pools its new embedding,
+    # exactly as a rebuilt engine would)
+    pooled, st = delta_cached_embedding_bag(
+        engine.delta, engine.item_hot, engine.item_table_q,
+        mask(batch["history"]), mode="mean")
     stats = stats + st
     feats.append(pooled)
     x = jnp.concatenate(feats, axis=-1)
@@ -262,23 +310,40 @@ def _features(engine: RecSysEngine, batch: dict):
 
 
 def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
+    """Filtering scan: routed base scan + (live engines) delta scan + merge.
+
+    The base epoch scans through whichever execution plan the engine is
+    configured for, with tombstoned rows masked out; pending delta rows
+    scan densely (the shard is bounded) and the two candidate buffers merge
+    into the exact rebuilt-table (distance, id) order
+    (`core.nns.merge_delta_candidates`).
+    """
     if engine.nns_mesh is not None and engine.nns_axis is not None:
-        return sharded_fixed_radius_nns(
+        base = sharded_fixed_radius_nns(
             engine.nns_mesh, engine.nns_axis, q_sigs, engine.item_sigs,
             engine.radius, engine.n_candidates,
             n_valid=engine.item_table_q.shape[0],
             scan_block=engine.scan_block,
-            query_axis=engine.nns_query_axis)
-    if engine.nns_mesh is not None:  # query-parallel only, db replicated
+            query_axis=engine.nns_query_axis,
+            db_mask=engine.item_mask)
+    elif engine.nns_mesh is not None:  # query-parallel only, db replicated
         # n_valid still matters: item_sigs may carry pad rows from an
         # earlier bank-sharded incarnation of this engine
-        return query_parallel_nns(
+        base = query_parallel_nns(
             engine.nns_mesh, engine.nns_query_axis, q_sigs, engine.item_sigs,
             engine.radius, engine.n_candidates, scan_block=engine.scan_block,
-            n_valid=engine.item_table_q.shape[0])
-    return fixed_radius_nns(q_sigs, engine.item_sigs, engine.radius,
-                            engine.n_candidates,
-                            scan_block=engine.scan_block)
+            n_valid=engine.item_table_q.shape[0],
+            db_mask=engine.item_mask)
+    else:
+        base = fixed_radius_nns(q_sigs, engine.item_sigs, engine.radius,
+                                engine.n_candidates,
+                                scan_block=engine.scan_block,
+                                db_mask=engine.item_mask)
+    if engine.delta is None or engine.delta.capacity == 0:
+        return base
+    pending = delta_scan(q_sigs, engine.delta.sigs, engine.delta.ids,
+                         engine.radius, engine.n_candidates)
+    return merge_delta_candidates(base, pending, engine.n_candidates)
 
 
 def _filter_step(engine: RecSysEngine, batch: dict):
@@ -299,8 +364,11 @@ def _rank(engine: RecSysEngine, batch: dict, cand: jax.Array,
     if valid is not None:  # padding rows: no candidate lookups, no stats
         cand = jnp.where(valid[:, None], cand, -1)
     # -1 candidates read zero rows and don't count as lookups; their CTR
-    # is masked to -inf below either way
-    items, st = cached_lookup(engine.item_hot, engine.item_table_q, cand)
+    # is masked to -inf below either way. Candidate rows resolve through
+    # the delta overlay (pending re-embeds/new items rank on their
+    # current rows, not the stale base).
+    items, st = delta_cached_rows(engine.delta, engine.item_hot,
+                                  engine.item_table_q, cand)
     genre = embedding_bag(engine.genre_table_q, batch["genre"][:, None])
     B, N = cand.shape
     ctx = jnp.concatenate([u, genre, pooled], axis=-1)

@@ -16,10 +16,13 @@ def _public_api():
     from repro.kernels import ops
     from repro.serving import (
         AsyncServer,
+        DeltaShard,
+        LiveCatalog,
         MicroBatcher,
         RecSysEngine,
         async_server,
         batcher,
+        catalog,
         filter_step,
         hot_cache,
         lookup_step,
@@ -36,8 +39,32 @@ def _public_api():
         ("serving.async_server", async_server),
         ("serving.recsys_engine", recsys_engine),
         ("serving.hot_cache", hot_cache),
+        ("serving.catalog", catalog),
         ("core.nns", nns),
         ("kernels.ops", ops),
+        # live catalog subsystem
+        ("LiveCatalog", LiveCatalog),
+        ("LiveCatalog.attach", LiveCatalog.attach),
+        ("LiveCatalog.apply_updates", LiveCatalog.apply_updates),
+        ("LiveCatalog.upsert", LiveCatalog.upsert),
+        ("LiveCatalog.delete", LiveCatalog.delete),
+        ("LiveCatalog.compact", LiveCatalog.compact),
+        ("LiveCatalog.snapshot", LiveCatalog.snapshot),
+        ("LiveCatalog.restore", LiveCatalog.restore),
+        ("DeltaShard", DeltaShard),
+        ("catalog.materialize", catalog.materialize),
+        ("catalog.rebuild_reference", catalog.rebuild_reference),
+        ("catalog.engine_apply_updates", catalog.engine_apply_updates),
+        ("catalog.compact_engine", catalog.compact_engine),
+        ("core.nns.delta_aware_nns", nns.delta_aware_nns),
+        ("core.nns.delta_scan", nns.delta_scan),
+        ("core.nns.merge_delta_candidates", nns.merge_delta_candidates),
+        ("hot_cache.invalidate_rows", hot_cache.invalidate_rows),
+        ("hot_cache.pin_rows", hot_cache.pin_rows),
+        ("MicroBatcher.swap_engine", MicroBatcher.swap_engine),
+        ("RecSysEngine.live", RecSysEngine.live),
+        ("RecSysEngine.apply_updates", RecSysEngine.apply_updates),
+        ("RecSysEngine.compact", RecSysEngine.compact),
         # engine + methods
         ("RecSysEngine", RecSysEngine),
         ("RecSysEngine.build", RecSysEngine.build),

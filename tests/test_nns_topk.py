@@ -113,12 +113,17 @@ def test_auto_routing_by_db_size(key, monkeypatch):
     _assert_same_result(dense, auto)
 
 
-def test_streaming_rejects_arbitrary_db_mask(key):
+def test_streaming_accepts_arbitrary_db_mask(key):
+    """The streaming plan carries arbitrary row masks (live-catalog
+    tombstones) since PR 5 — bit-matching the dense masked path."""
     _, sigs = _sigs(key, 64)
     mask = jnp.arange(64) % 2 == 0
-    with pytest.raises(ValueError, match="n_valid"):
-        fixed_radius_nns(sigs[:1], sigs, radius=30, max_candidates=4,
-                         db_mask=mask, scan_block=16)
+    want = fixed_radius_nns(sigs[:3], sigs, radius=30, max_candidates=4,
+                            db_mask=mask, scan_block=0)
+    got = fixed_radius_nns(sigs[:3], sigs, radius=30, max_candidates=4,
+                           db_mask=mask, scan_block=16)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_sharded_matches_unsharded(key):

@@ -1,0 +1,122 @@
+"""Diff BENCH_<name>.json artifacts and flag qps regressions.
+
+The benchmarks all emit machine-readable ``BENCH_<name>.json`` (see
+benchmarks/bench_io.py) with per-row ``qps=...`` figures embedded in the
+``derived`` string and a ``us_per_call`` column. This tool makes the perf
+trajectory actionable: point it at two artifacts (or two directories of
+them — files pair up by benchmark name) and it prints a side-by-side table
+with each side's provenance (git sha + timestamp, stamped by the shared
+writer) and exits non-zero on any regression beyond the threshold.
+
+A row regresses when its qps drops by more than ``--threshold`` (default
+10%), or — for rows without a qps figure — when ``us_per_call`` rises by
+more than the threshold. Rows carry an ``ok=False`` style self-check in
+``derived`` sometimes; those are the benchmark's own gates and are not
+re-judged here. Rows present on only one side are listed but never fail
+the diff (benchmarks grow cells over time).
+
+Stdlib-only (like tools/check_docs.py), so CI can run it without a jax
+install:
+
+    python tools/bench_compare.py OLD NEW [--threshold 0.10]
+
+where OLD/NEW are BENCH_*.json files or directories containing them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+_QPS = re.compile(r"(?:^|;)qps=([0-9.eE+-]+)")
+
+
+def load_artifacts(path: Path) -> dict[str, dict]:
+    """{bench name: payload} for one file or every BENCH_*.json in a dir."""
+    files = ([path] if path.is_file() else
+             sorted(path.glob("BENCH_*.json")))
+    if not files:
+        raise FileNotFoundError(f"no BENCH_*.json under {path}")
+    out = {}
+    for f in files:
+        payload = json.loads(f.read_text())
+        out[payload.get("bench", f.stem)] = payload
+    return out
+
+
+def row_metric(row: dict):
+    """(kind, value) — ('qps', v) if the derived string carries one,
+    else ('us_per_call', v); (None, None) when neither is usable."""
+    m = _QPS.search(row.get("derived", "") or "")
+    if m:
+        return "qps", float(m.group(1))
+    us = row.get("us_per_call")
+    if isinstance(us, (int, float)) and us > 0:
+        return "us_per_call", float(us)
+    return None, None
+
+
+def provenance(payload: dict) -> str:
+    sha = payload.get("git_sha") or "?"
+    return f"{str(sha)[:12]} @ {payload.get('iso_time', '?')}"
+
+
+def compare_bench(name: str, old: dict, new: dict, threshold: float):
+    """Yield (row_name, verdict, detail, is_regression) for one benchmark."""
+    old_rows = {r["name"]: r for r in old.get("rows", [])}
+    new_rows = {r["name"]: r for r in new.get("rows", [])}
+    for row_name in sorted(old_rows | new_rows):
+        if row_name not in new_rows:
+            yield row_name, "dropped", "row only in OLD", False
+            continue
+        if row_name not in old_rows:
+            yield row_name, "new", "row only in NEW", False
+            continue
+        kind, was = row_metric(old_rows[row_name])
+        kind2, now = row_metric(new_rows[row_name])
+        if kind is None or kind != kind2:
+            yield row_name, "skip", "no comparable metric", False
+            continue
+        if kind == "qps":
+            ratio = now / was if was else float("inf")
+            bad = ratio < 1.0 - threshold
+            detail = f"qps {was:.0f} -> {now:.0f} ({ratio:.2f}x)"
+        else:
+            ratio = now / was if was else float("inf")
+            bad = ratio > 1.0 + threshold
+            detail = f"us/call {was:.1f} -> {now:.1f} ({ratio:.2f}x)"
+        yield row_name, ("REGRESSION" if bad else "ok"), detail, bad
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_<name>.json artifacts (or directories)")
+    ap.add_argument("old", type=Path)
+    ap.add_argument("new", type=Path)
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="fractional qps drop (or us/call rise) that "
+                         "counts as a regression (default 0.10)")
+    args = ap.parse_args(argv)
+
+    olds, news = load_artifacts(args.old), load_artifacts(args.new)
+    n_regressions = 0
+    for name in sorted(olds | news):
+        if name not in news or name not in olds:
+            side = "OLD" if name in olds else "NEW"
+            print(f"[{name}] only in {side} — skipped")
+            continue
+        print(f"[{name}] {provenance(olds[name])}  ->  "
+              f"{provenance(news[name])}")
+        for row_name, verdict, detail, bad in compare_bench(
+                name, olds[name], news[name], args.threshold):
+            print(f"  {verdict:>10}  {row_name}  {detail}")
+            n_regressions += bad
+    print(f"{n_regressions} regression(s) beyond "
+          f"{args.threshold:.0%} threshold")
+    return 1 if n_regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
