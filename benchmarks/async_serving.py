@@ -28,8 +28,12 @@ runtime; `--scan-block 0` switches to the dense plan), so the scan
 dominates exactly as it does at production scale.
 
   PYTHONPATH=src python -m benchmarks.async_serving
-      [--batch 256] [--queries 2048] [--items 16384] [--scan-block 4096]
-      [--depth 2] [--devices 2] [--wave 1024] [--repeats 2]
+      [--sizes 16384] [--batch 256] [--queries 2048] [--scan-block 4096]
+      [--depth 2] [--devices 2] [--wave 1024] [--repeats 2] [--out DIR]
+
+``--sizes`` (comma-separated catalog sizes), ``--repeats``, and ``--out``
+are the flags every serving benchmark shares, so tools/bench_compare.py
+can diff any pair of artifacts without per-benchmark special cases.
 
 Variance control (this host is a noisy 2-core container): unless the
 caller already set it, ``--xla_cpu_multi_thread_eigen=false`` is appended
@@ -110,7 +114,7 @@ def rows(batch: int, n_queries: int, n_items: int, depth: int,
     import numpy as np
 
     from repro.data.synthetic import serving_queries
-    from repro.serving import AsyncServer, MicroBatcher
+    from repro.serving import make_server
 
     engine, data = _setup(n_items, scan_block)
     rng = np.random.default_rng(0)
@@ -118,17 +122,18 @@ def rows(batch: int, n_queries: int, n_items: int, depth: int,
     warm = serving_queries(data, rng.integers(0, data.n_users, wave))
 
     servers = [
-        ("sync", MicroBatcher(engine, max_batch=batch, buckets=(batch,))),
-        ("pipelined", AsyncServer(engine, max_batch=batch, buckets=(batch,),
-                                  depth=depth)),
+        ("sync", make_server(engine, "sync", max_batch=batch,
+                             buckets=(batch,))),
+        ("pipelined", make_server(engine, "pipelined", max_batch=batch,
+                                  buckets=(batch,), depth=depth)),
     ]
     if n_devices > 1 and jax.device_count() >= n_devices:
         mesh = jax.make_mesh((n_devices,), ("qp",))
         routed = engine.shard(mesh, query_axis="qp")
         servers.append((
             f"pipelined_routed_qp{n_devices}",
-            AsyncServer(routed, max_batch=batch, buckets=(batch,),
-                        depth=depth)))
+            make_server(routed, "pipelined", max_batch=batch,
+                        buckets=(batch,), depth=depth)))
 
     out, qps, base_items = [], {}, None
     for name, server in servers:
@@ -143,7 +148,7 @@ def rows(batch: int, n_queries: int, n_items: int, depth: int,
             base_items = items
         bitmatch = bool((items == base_items).all())
         out.append((
-            f"serving/async/{name}_batch{batch}", 1e6 / q,
+            f"serving/async/{name}_batch{batch}_n{n_items}", 1e6 / q,
             f"qps={q:.0f};p50_ms={p50:.2f};p99_ms={p99:.2f};"
             f"bitmatch_sync={bitmatch};host=CPU(container)",
         ))
@@ -151,7 +156,7 @@ def rows(batch: int, n_queries: int, n_items: int, depth: int,
     best = max(q for name, q in qps.items() if name != "sync")
     speedup = best / qps["sync"]
     out.append((
-        "serving/async/pipelined_speedup", 0.0,
+        f"serving/async/pipelined_speedup_n{n_items}", 0.0,
         f"pipelined_over_sync={speedup:.2f}x(target >=1.2x);"
         f"ok={speedup >= 1.2};batch={batch};items={n_items};depth={depth}",
     ))
@@ -160,9 +165,14 @@ def rows(batch: int, n_queries: int, n_items: int, depth: int,
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated catalog sizes (unified flag; "
+                         "default: --items)")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--queries", type=int, default=2048)
-    ap.add_argument("--items", type=int, default=16384)
+    ap.add_argument("--items", type=int, default=16384,
+                    help="catalog size (alias kept for back-compat; "
+                         "--sizes wins when both are given)")
     ap.add_argument("--scan-block", type=int, default=4096,
                     help="engine scan_block: the streaming filtering plan "
                          "(the million-item operating point, scaled to "
@@ -176,7 +186,11 @@ def main():
     ap.add_argument("--repeats", type=int, default=2,
                     help="measured passes per server (first doubles as "
                          "warmup; best pass reported)")
+    ap.add_argument("--out", type=str, default=None,
+                    help="artifact directory (default $BENCH_OUT_DIR or .)")
     args = ap.parse_args()
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else (args.items,))
 
     _default_xla_cpu_flags()  # must precede the first jax import
     if args.devices > 1:  # must precede the first jax import
@@ -186,14 +200,17 @@ def main():
 
     from benchmarks.bench_io import csv_rows_to_json, write_bench_json
 
-    out = rows(args.batch, args.queries, args.items, args.depth,
-               args.devices, args.wave, args.scan_block, args.repeats)
+    out = []
+    for n_items in sizes:
+        out.extend(rows(args.batch, args.queries, n_items, args.depth,
+                        args.devices, args.wave, args.scan_block,
+                        args.repeats))
     for name, us, derived in out:
         print(f"{name},{us:.6f},{derived}")
     path = write_bench_json(
-        "async_serving", csv_rows_to_json(out),
+        "async_serving", csv_rows_to_json(out), out_dir=args.out,
         config={"batch": args.batch, "queries": args.queries,
-                "items": args.items, "scan_block": args.scan_block,
+                "sizes": sizes, "scan_block": args.scan_block,
                 "depth": args.depth, "devices": args.devices,
                 "wave": args.wave, "repeats": args.repeats})
     print(f"# wrote {path}")

@@ -28,14 +28,19 @@ def git_sha() -> str | None:
         return None  # provenance is best-effort; never lose the artifact
 
 
-def write_bench_json(name: str, rows: list[dict], **extra) -> str:
+def write_bench_json(name: str, rows: list[dict], *, out_dir: str | None = None,
+                     **extra) -> str:
     """Write BENCH_<name>.json with `rows` + host metadata; returns the path.
 
     Every artifact carries provenance (`git_sha`, `iso_time`) so perf
     trajectories across PRs are attributable — `tools/bench_compare.py`
-    prints both sides' provenance when diffing.
+    prints both sides' provenance when diffing. `rows` must be the
+    csv-shaped dicts of `csv_rows_to_json` (name/us_per_call/derived) —
+    the one shape `tools/bench_compare.py` diffs without special cases;
+    benchmark-specific raw measurements ride in `**extra` keys instead.
+    `out_dir` (the unified ``--out`` flag) overrides $BENCH_OUT_DIR.
     """
-    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    out_dir = out_dir or os.environ.get("BENCH_OUT_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     payload = {

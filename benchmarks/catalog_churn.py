@@ -29,9 +29,12 @@ Acceptance gate: ``live_churn`` sustains >= 0.8x frozen qps at 256k items
 with 1% dirty rows. The nightly lane runs the 1M cell.
 
   PYTHONPATH=src python -m benchmarks.catalog_churn
-      [--items 262144] [--queries 1024] [--batch 256] [--dirty-frac 0.01]
+      [--sizes 262144] [--queries 1024] [--batch 256] [--dirty-frac 0.01]
       [--updates-per-wave 256] [--scan-block 4096] [--wave 256] [--depth 3]
-      [--repeats 2]
+      [--repeats 2] [--out DIR]
+
+``--sizes``/``--repeats``/``--out`` are the flags every serving benchmark
+shares (see tools/bench_compare.py); front-ends come from `make_server`.
 
 Variance control mirrors benchmarks/async_serving.py: the Eigen
 single-thread XLA flag is defaulted in before jax loads and every qps cell
@@ -102,7 +105,10 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
     import numpy as np
 
     from repro.data.synthetic import serving_queries
-    from repro.serving import AsyncServer, LiveCatalog, MicroBatcher
+    from repro.serving import LiveCatalog, make_server
+
+    def sync_server(eng):
+        return make_server(eng, "sync", max_batch=batch, buckets=(batch,))
 
     engine, data = _setup(items, scan_block)
     rng = np.random.default_rng(0)
@@ -122,7 +128,7 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
                     for _ in range(max(repeats, 1))), key=lambda r: r[0])
 
     # -- frozen baseline ------------------------------------------------
-    frozen = MicroBatcher(engine, max_batch=batch, buckets=(batch,))
+    frozen = sync_server(engine)
     frozen.serve_many(warm)  # compile off the clock
     qps_frozen, items_frozen, _, _ = best(frozen)
     out.append((f"serving/churn/frozen_{items}", 1e6 / qps_frozen,
@@ -130,7 +136,7 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
 
     # -- live, empty delta (steady post-compaction state) ---------------
     cat = LiveCatalog(engine, delta_capacity=n_dirty)
-    clean = MicroBatcher(cat.engine, max_batch=batch, buckets=(batch,))
+    clean = sync_server(cat.engine)
     cat.attach(clean)
     clean.serve_many(warm)
     qps_clean, items_clean, _, _ = best(clean)
@@ -149,7 +155,7 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
             size=(updates_per_wave, d)).astype(np.float32))
         return updates_per_wave
 
-    churn = MicroBatcher(cat.engine, max_batch=batch, buckets=(batch,))
+    churn = sync_server(cat.engine)
     cat.attach(churn)
     churn.serve_many(warm)
     qps_churn, _, n_up, up_rate = best(churn, apply_updates)
@@ -165,20 +171,16 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
 
     # -- the delta path is exact (pre-compaction) -----------------------
     probe = queries[: min(len(queries), 2 * batch)]
-    live_out = MicroBatcher(cat.engine, max_batch=batch,
-                            buckets=(batch,)).serve_many(probe)
-    ref_pre = MicroBatcher(cat.rebuild_reference(), max_batch=batch,
-                           buckets=(batch,)).serve_many(probe)
+    live_out = sync_server(cat.engine).serve_many(probe)
+    ref_pre = sync_server(cat.rebuild_reference()).serve_many(probe)
     _assert_stream_equal(np.stack([s.items for s in live_out]),
                          np.stack([s.items for s in ref_pre]),
                          "delta path vs cold rebuild")
 
     # -- compaction: pause + post-fold bit-match vs cold rebuild --------
     pause_s = cat.compact()
-    post = MicroBatcher(cat.engine, max_batch=batch,
-                        buckets=(batch,)).serve_many(probe)
-    ref_post = MicroBatcher(cat.rebuild_reference(), max_batch=batch,
-                            buckets=(batch,)).serve_many(probe)
+    post = sync_server(cat.engine).serve_many(probe)
+    ref_post = sync_server(cat.rebuild_reference()).serve_many(probe)
     _assert_stream_equal(np.stack([s.items for s in post]),
                          np.stack([s.items for s in ref_post]),
                          "post-compaction vs cold rebuild")
@@ -194,8 +196,8 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
     k = min(updates_per_wave, n_dirty)
     cat.upsert(dirty_ids[:k], rng.normal(size=(k, d)).astype(np.float32))
     old_ref = cat.rebuild_reference()
-    pipe = AsyncServer(cat.engine, max_batch=batch, buckets=(batch,),
-                       depth=depth)
+    pipe = make_server(cat.engine, "pipelined", max_batch=batch,
+                       buckets=(batch,), depth=depth)
     cat.attach(pipe)
     pipe.serve_many(warm)
     tickets = [pipe.submit(q) for q in queries]
@@ -209,10 +211,10 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
     new_ref = cat.rebuild_reference()
     pipe.flush()
     got = np.stack([pipe.result(t).items for t in tickets])
-    want_old = np.stack([s.items for s in MicroBatcher(
-        old_ref, max_batch=batch, buckets=(batch,)).serve_many(queries)])
-    want_new = np.stack([s.items for s in MicroBatcher(
-        new_ref, max_batch=batch, buckets=(batch,)).serve_many(queries)])
+    want_old = np.stack([s.items for s in
+                         sync_server(old_ref).serve_many(queries)])
+    want_new = np.stack([s.items for s in
+                         sync_server(new_ref).serve_many(queries)])
     _assert_stream_equal(got[:n_pre], want_old[:n_pre],
                          "pre-swap buckets must serve the old epoch")
     _assert_stream_equal(got[n_pre:], want_new[n_pre:],
@@ -227,8 +229,12 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated catalog sizes (unified flag; "
+                         "default: --items)")
     ap.add_argument("--items", type=int, default=262_144,
-                    help="catalog rows (256k default; nightly runs 1M)")
+                    help="catalog rows (256k default; nightly runs 1M; "
+                         "--sizes wins when both are given)")
     ap.add_argument("--queries", type=int, default=1024)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--wave", type=int, default=256,
@@ -244,7 +250,11 @@ def main():
     ap.add_argument("--repeats", type=int, default=2,
                     help="measured passes per qps cell (first doubles as "
                          "warmup; best pass reported)")
+    ap.add_argument("--out", type=str, default=None,
+                    help="artifact directory (default $BENCH_OUT_DIR or .)")
     args = ap.parse_args()
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else (args.items,))
 
     from benchmarks.async_serving import _default_xla_cpu_flags
 
@@ -252,14 +262,16 @@ def main():
 
     from benchmarks.bench_io import csv_rows_to_json, write_bench_json
 
-    out = rows(args.items, args.queries, args.batch, args.wave,
-               args.dirty_frac, args.updates_per_wave, args.scan_block,
-               args.depth, args.repeats)
+    out = []
+    for n_items in sizes:
+        out.extend(rows(n_items, args.queries, args.batch, args.wave,
+                        args.dirty_frac, args.updates_per_wave,
+                        args.scan_block, args.depth, args.repeats))
     for name, us, derived in out:
         print(f"{name},{us:.6f},{derived}")
     path = write_bench_json(
-        "catalog_churn", csv_rows_to_json(out),
-        config={"items": args.items, "queries": args.queries,
+        "catalog_churn", csv_rows_to_json(out), out_dir=args.out,
+        config={"sizes": sizes, "queries": args.queries,
                 "batch": args.batch, "wave": args.wave,
                 "dirty_frac": args.dirty_frac,
                 "updates_per_wave": args.updates_per_wave,

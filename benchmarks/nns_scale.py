@@ -27,7 +27,12 @@ DENSE_MAX_BYTES; the streaming path must hold >= 1M items on CPU with peak
 incremental memory under 10% of the dense matrix it replaces.
 
   PYTHONPATH=src python -m benchmarks.nns_scale [--full] [--sizes N,N,...]
-      [--assert-stream-mem BYTES]
+      [--repeats 2] [--out DIR] [--assert-stream-mem BYTES]
+
+``--sizes``/``--repeats``/``--out`` are the flags every benchmark shares;
+the artifact's ``rows`` are the same csv-shaped dicts every benchmark
+emits (so tools/bench_compare.py diffs any pair without special cases)
+and the raw per-cell measurements ride in the ``cells`` key.
 
 `--assert-stream-mem` exits non-zero if any streaming cell fails its memory
 contract (the nightly CI lane runs the 8M cell under a hard RSS budget).
@@ -50,7 +55,7 @@ RADIUS = 96
 MAX_CANDIDATES = 128
 SCAN_BLOCK = 4096
 DENSE_MAX_BYTES = 1 << 28  # skip dense when (q, n) int32 alone exceeds 256 MiB
-REPS = 2
+REPS = 2  # default --repeats (steady-state scans averaged per cell)
 
 
 def scan_block_for(n: int) -> int:
@@ -100,11 +105,12 @@ def _cell(n: int, path: str) -> dict:
     t0 = time.perf_counter()
     res = fn(queries)
     jax.block_until_ready(res)  # compile + first scan
+    reps = int(os.environ.get("NNS_SCALE_REPS", REPS))
     t1 = time.perf_counter()
-    for _ in range(REPS):
+    for _ in range(reps):
         res = fn(queries)
     jax.block_until_ready(res)
-    steady = (time.perf_counter() - t1) / REPS
+    steady = (time.perf_counter() - t1) / reps
     rss_delta = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024 - rss0
 
     row = {"n": n, "q": Q, "path": path, "status": "ok",
@@ -142,7 +148,7 @@ def _cell(n: int, path: str) -> dict:
     return row
 
 
-def _spawn_cell(n: int, path: str) -> dict:
+def _spawn_cell(n: int, path: str, repeats: int = REPS) -> dict:
     """Run one cell in a fresh interpreter; returns its JSON row.
 
     A crashed cell (e.g. the dense path OOM-killed on a small host — the
@@ -152,6 +158,7 @@ def _spawn_cell(n: int, path: str) -> dict:
     env = dict(os.environ)
     # the bare container env hangs on TPU plugin init; pin the parent backend
     env.setdefault("JAX_PLATFORMS", "cpu")
+    env["NNS_SCALE_REPS"] = str(max(repeats, 1))
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.nns_scale",
          "--cell", str(n), path],
@@ -177,7 +184,7 @@ def _derived(row: dict) -> str:
     return ";".join(bits)
 
 
-def rows(sizes=SIZES):
+def rows(sizes=SIZES, repeats: int = REPS):
     out, json_rows = [], []
     for n in sizes:
         paths = ["streaming"]
@@ -186,7 +193,7 @@ def rows(sizes=SIZES):
         if Q * n * 4 <= DENSE_MAX_BYTES:
             paths.append("dense")
         for path in paths:
-            row = _spawn_cell(n, path)
+            row = _spawn_cell(n, path, repeats)
             json_rows.append(row)
             if row["status"] != "ok":
                 out.append((f"nns_scale/{path}/n{n}", 0.0, "status=failed"))
@@ -241,7 +248,12 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="extend the sweep to the 4M/8M/16M wide-key cells")
     ap.add_argument("--sizes", type=str, default=None,
-                    help="comma-separated catalog sizes (overrides --full)")
+                    help="comma-separated catalog sizes (unified flag; "
+                         "overrides --full)")
+    ap.add_argument("--repeats", type=int, default=REPS,
+                    help="steady-state scans averaged per cell")
+    ap.add_argument("--out", type=str, default=None,
+                    help="artifact directory (default $BENCH_OUT_DIR or .)")
     ap.add_argument("--assert-stream-mem", type=int, default=None,
                     metavar="BYTES",
                     help="exit 1 unless every streaming cell is ok, under "
@@ -253,22 +265,28 @@ def main():
         print(json.dumps(_cell(int(args.cell[0]), args.cell[1])))
         return
 
-    from benchmarks.bench_io import write_bench_json
+    from benchmarks.bench_io import csv_rows_to_json, write_bench_json
 
     if args.sizes:
         sizes = tuple(int(s) for s in args.sizes.split(","))
     else:
         sizes = FULL_SIZES if args.full else SIZES
-    out, json_rows = rows(sizes)
+    out, json_rows = rows(sizes, args.repeats)
     for name, us, derived in out:
         print(f"{name},{us:.3f},{derived}")
+    # `rows` carries the one csv shape bench_compare diffs; the raw
+    # per-cell measurements (rss deltas, compile times, ...) ride in
+    # `cells` — previously they *were* the rows, which broke any tool
+    # expecting the shared name/us_per_call/derived shape
     path = write_bench_json(
-        "nns_scale", json_rows,
+        "nns_scale", csv_rows_to_json(out), out_dir=args.out,
+        cells=json_rows,
         config={"radius": RADIUS, "max_candidates": MAX_CANDIDATES,
                 "words": WORDS, "q": Q, "q_oracle": Q_ORACLE,
                 # the chunk each cell ran with is in its row's scan_block
                 # field (scan_block_for ramps it with catalog size)
-                "dense_max_bytes": DENSE_MAX_BYTES, "reps": REPS})
+                "dense_max_bytes": DENSE_MAX_BYTES,
+                "reps": args.repeats})
     print(f"# wrote {path}")
     if args.assert_stream_mem is not None:
         problems = check_stream_contract(json_rows, args.assert_stream_mem)

@@ -1,19 +1,25 @@
 """Serve a trained RecSys through the batched iMARS serving subsystem:
-single-user queries go into the MicroBatcher queue, get bucketed into fixed
-batch shapes, and run through one jitted serve step (hot-row-cached
+single-user queries go into the micro-batching queue, get bucketed into
+fixed batch shapes, and run through one jitted serve step (hot-row-cached
 UIET/ItET lookups -> filtering NNS -> ranking -> CTR threshold top-k).
 Reports measured software throughput, the hot-cache hit rate, and the
 hardware cost model's per-query latency/energy (the 22,025 qps / 16.8x /
 713x headline numbers).
 
-`--pipeline` serves the same stream through the pipelined `AsyncServer`
-instead: buckets dispatch through the staged lookup -> scan -> rank steps
-onto a ring of in-flight batches, overlapping host-side batching with the
-device's NNS scan (bit-identical results; see docs/ARCHITECTURE.md and
-benchmarks/async_serving.py for the measured speedup).
+Every front-end is constructed through the one factory —
+``make_server(engine, mode, **knobs)`` (docs/SERVING.md):
+
+  * ``--mode sync``       the synchronous micro-batcher (default);
+  * ``--mode pipelined``  the ring of in-flight buckets dispatched through
+    the staged lookup -> scan -> rank steps, overlapping host-side
+    batching with the device's NNS scan (bit-identical results; see
+    benchmarks/async_serving.py for the measured speedup);
+  * ``--mode concurrent`` the threaded multi-tenant front-end: bounded
+    per-tenant queues + load shedding over the pipelined ring
+    (bit-identical for every admitted query).
 
   PYTHONPATH=src python examples/serve_recsys.py [--queries 2000]
-      [--pipeline] [--depth 2]
+      [--mode sync|pipelined|concurrent] [--depth 2]
 """
 import argparse
 import time
@@ -22,7 +28,7 @@ import numpy as np
 
 from repro.core import cost_model as cm
 from repro.data import synthetic
-from repro.serving import AsyncServer, MicroBatcher, RecSysEngine
+from repro.serving import RecSysEngine, make_server
 from examples.train_recsys import train
 
 
@@ -34,11 +40,15 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--hot-rows", type=int, default=128)
+    ap.add_argument("--mode", choices=("sync", "pipelined", "concurrent"),
+                    default="sync", help="front-end (make_server mode)")
     ap.add_argument("--pipeline", action="store_true",
-                    help="serve through the pipelined AsyncServer ring")
+                    help="deprecated alias for --mode pipelined")
     ap.add_argument("--depth", type=int, default=2,
-                    help="in-flight ring depth (with --pipeline)")
+                    help="in-flight ring depth (pipelined/concurrent)")
     args = ap.parse_args()
+    if args.pipeline:
+        args.mode = "pipelined"
 
     data = synthetic.make_movielens(n_users=args.users, n_items=args.items)
     print("== training (quick) ==")
@@ -48,11 +58,10 @@ def main():
     engine = RecSysEngine.build(params, cfg, radius=112, n_candidates=50,
                                 top_k=10, hot_rows=args.hot_rows,
                                 item_freqs=freqs)
-    if args.pipeline:
-        batcher = AsyncServer(engine, max_batch=args.batch, depth=args.depth)
-        print(f"== pipelined serving (ring depth {args.depth}) ==")
-    else:
-        batcher = MicroBatcher(engine, max_batch=args.batch)
+    knobs = ({} if args.mode == "sync" else {"depth": args.depth})
+    batcher = make_server(engine, args.mode, max_batch=args.batch, **knobs)
+    if args.mode != "sync":
+        print(f"== {args.mode} serving (ring depth {args.depth}) ==")
 
     rng = np.random.default_rng(0)
 
@@ -71,7 +80,10 @@ def main():
     for size in warm_sizes:
         batcher.serve_many([make_query(i) for i in
                             rng.integers(0, data.n_users, size)])
-    batcher.n_batches = batcher.n_served = batcher.n_padded = 0
+    # reset batch counters so the report covers the timed run only (the
+    # concurrent front-end keeps its counters on the inner ring server)
+    counters = getattr(batcher, "_inner", batcher)
+    counters.n_batches = counters.n_served = counters.n_padded = 0
 
     idx = rng.integers(0, data.n_users, args.queries)
     t0 = time.time()
@@ -80,9 +92,11 @@ def main():
 
     print(f"\nserved {len(served)} queries in {dt:.2f}s "
           f"({len(served) / dt:.0f} qps measured on THIS CPU — software path)")
-    print(f"micro-batches: {batcher.n_batches}, "
-          f"padding fraction {batcher.padding_fraction:.3f}, "
-          f"hot-cache hit rate {batcher.cache_hit_rate:.3f}")
+    stats = batcher.stats()
+    print(f"micro-batches: {stats['n_batches']}, "
+          f"padding fraction {stats['padding_fraction']:.3f}, "
+          f"hot-cache hit rate {stats['cache_hit_rate']:.3f}")
+    batcher.close()
     e2e = cm.end_to_end_movielens(n_candidates=50)
     print(f"iMARS fabric model: {e2e['imars_qps']:.0f} qps/query-engine, "
           f"{e2e['imars_latency_us']:.1f} us, {e2e['imars_energy_uj']:.1f} uJ"

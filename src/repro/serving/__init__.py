@@ -2,12 +2,32 @@
 the per-session cache), prefill/decode steps, and the batched RecSys
 subsystem (micro-batching queue + hot-row cache + jitted serve step, plus
 the pipelined `AsyncServer` that overlaps host-side batching with the
-in-flight NNS scan via the staged lookup/scan/rank steps, and the
-`LiveCatalog` versioned embedding store: bounded delta shard + tombstones
-+ epoch compaction over a read-only base, serving bit-identically to a
-from-scratch rebuild while the catalog churns)."""
+in-flight NNS scan via the staged lookup/scan/rank steps, the threaded
+multi-tenant `ConcurrentFrontend` with bounded per-tenant queues and load
+shedding, and the `LiveCatalog` versioned embedding store: bounded delta
+shard + tombstones + epoch compaction over a read-only base, serving
+bit-identically to a from-scratch rebuild while the catalog churns).
+
+Every front-end implements the one `Server` protocol (submit -> ticket,
+result(ticket), flush, close, stats) and is constructed through
+`make_server(engine, mode="sync" | "pipelined" | "concurrent", **knobs)`
+— see serving/server.py and docs/SERVING.md."""
 from repro.serving.async_server import AsyncServer
 from repro.serving.batcher import MicroBatcher, ServedQuery, default_buckets
+from repro.serving.frontend import ConcurrentFrontend, TicketTrace
+from repro.serving.load_gen import LoadGen, LoadSummary, summarize_trace
+from repro.serving.server import (
+    STATUS_ERROR,
+    STATUS_OK,
+    STATUS_SHED,
+    QueueFullError,
+    SchemaMismatchError,
+    Server,
+    ServerClosedError,
+    ServerConfigError,
+    ServingError,
+    make_server,
+)
 from repro.serving.catalog import (
     DeltaFullError,
     DeltaShard,
@@ -40,16 +60,29 @@ from repro.serving.recsys_engine import (
 )
 
 __all__ = [
+    "STATUS_ERROR",
+    "STATUS_OK",
+    "STATUS_SHED",
     "AsyncServer",
     "CacheStats",
+    "ConcurrentFrontend",
     "DeltaFullError",
     "DeltaShard",
     "HotRowCache",
     "LiveCatalog",
+    "LoadGen",
+    "LoadSummary",
     "MicroBatcher",
+    "QueueFullError",
     "RecSysEngine",
+    "SchemaMismatchError",
     "ServeResult",
     "ServedQuery",
+    "Server",
+    "ServerClosedError",
+    "ServerConfigError",
+    "ServingError",
+    "TicketTrace",
     "build_hot_cache",
     "cached_embedding_bag",
     "cached_lookup",
@@ -61,6 +94,7 @@ __all__ = [
     "hit_rate",
     "invalidate_rows",
     "lookup_step",
+    "make_server",
     "materialize",
     "pin_rows",
     "rank_stage_step",
@@ -68,4 +102,5 @@ __all__ = [
     "rebuild_reference",
     "scan_step",
     "serve_step",
+    "summarize_trace",
 ]

@@ -56,7 +56,8 @@ from typing import NamedTuple, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.batcher import MicroBatcher, ServedQuery
+from repro.serving.batcher import MicroBatcher
+from repro.serving.server import ServerConfigError
 from repro.serving.recsys_engine import (
     RecSysEngine,
     lookup_step,
@@ -94,19 +95,21 @@ class AsyncServer(MicroBatcher):
     depth / coalesce / bucket mix (tested).
     """
 
+    mode = "pipelined"
+
     def __init__(self, engine: RecSysEngine, *, max_batch: int = 256,
                  buckets: Sequence[int] | None = None, depth: int = 2,
                  coalesce: int | None = None):
         super().__init__(engine, max_batch=max_batch, buckets=buckets)
         if depth < 1:
-            raise ValueError(f"ring depth must be >= 1, got {depth}")
+            raise ServerConfigError(f"ring depth must be >= 1, got {depth}")
         if coalesce is None:
             routed = (engine.nns_mesh is not None
                       and engine.nns_query_axis is not None)
             coalesce = (engine.nns_mesh.shape[engine.nns_query_axis]
                         if routed else 1)
         if coalesce < 1:
-            raise ValueError(f"coalesce must be >= 1, got {coalesce}")
+            raise ServerConfigError(f"coalesce must be >= 1, got {coalesce}")
         self.depth = depth
         self.coalesce = coalesce
         self._ring: deque[_InFlight] = deque()
@@ -176,6 +179,13 @@ class AsyncServer(MicroBatcher):
         row = 0
         for chunk, bucket in inf.parts:
             for j, (ticket, _) in enumerate(chunk):
-                self._results[ticket] = ServedQuery(
-                    items=items[row + j], scores=scores[row + j])
+                self._resolve(ticket, items[row + j], scores[row + j])
             row += bucket
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """`MicroBatcher.stats()` + the ring knobs and occupancy."""
+        out = super().stats()
+        out.update(depth=self.depth, coalesce=self.coalesce,
+                   in_flight=self.in_flight)
+        return out

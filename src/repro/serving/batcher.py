@@ -32,6 +32,7 @@ host round-trip per flush.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import jax
@@ -39,6 +40,12 @@ import numpy as np
 
 from repro.serving.hot_cache import CacheStats
 from repro.serving.recsys_engine import RecSysEngine, serve_step
+from repro.serving.server import (
+    STATUS_OK,
+    SchemaMismatchError,
+    ServerClosedError,
+    ServerConfigError,
+)
 
 
 def default_buckets(max_batch: int) -> tuple[int, ...]:
@@ -53,8 +60,23 @@ def default_buckets(max_batch: int) -> tuple[int, ...]:
 
 @dataclasses.dataclass
 class ServedQuery:
+    """One redeemed ticket: the recommendation (or its admission outcome).
+
+    ``status`` is ``"ok"`` for an engine-served result; the concurrent
+    front-end resolves rejected/failed tickets as ``"shed"`` / ``"error"``
+    with sentinel payloads (items all -1, scores all 0) instead of raising
+    through `result()` — see serving/server.py.
+    """
+
     items: np.ndarray  # (top_k,) recommended item ids, -1 padded
     scores: np.ndarray  # (top_k,) CTR scores
+    status: str = STATUS_OK  # "ok" | "shed" | "error"
+    tenant: int = 0  # submitting tenant (0 for single-tenant front-ends)
+
+    @property
+    def ok(self) -> bool:
+        """True when the engine actually served this ticket."""
+        return self.status == STATUS_OK
 
 
 class MicroBatcher:
@@ -66,18 +88,26 @@ class MicroBatcher:
     order. `serve_many` is the one-call convenience wrapper.
     """
 
+    mode = "sync"
+
     def __init__(self, engine: RecSysEngine, *, max_batch: int = 256,
                  buckets: Sequence[int] | None = None):
         self.engine = engine
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets or default_buckets(max_batch)))
-        assert self.buckets[-1] == max_batch, (self.buckets, max_batch)
+        if self.buckets[-1] != max_batch:
+            raise ServerConfigError(
+                f"largest bucket {self.buckets[-1]} must equal "
+                f"max_batch={max_batch} (buckets={self.buckets})")
         self._feature_names = tuple(sorted(engine.cfg.user_features.keys()))
         self._pending: list[tuple[int, dict]] = []
         self._results: dict[int, ServedQuery] = {}
         self._next_ticket = 0
+        self._closed = False
         # donated accumulator: hot-cache hits/lookups across every batch
         self._stats = CacheStats.zero()
+        self._tenant_of: dict[int, int] = {}  # ticket -> submitting tenant
+        self._per_tenant: dict[int, dict] = {}
         self.n_served = 0
         self.n_padded = 0
         self.n_batches = 0
@@ -95,31 +125,47 @@ class MicroBatcher:
         """
         if tuple(sorted(engine.cfg.user_features.keys())) \
                 != self._feature_names:
-            raise ValueError("swap_engine: user-feature schema changed; "
-                             "start a new server instead")
+            raise SchemaMismatchError(
+                "swap_engine: user-feature schema changed; "
+                "start a new server instead")
         self.engine = engine
 
     # ------------------------------------------------------------------
-    def submit(self, query: dict) -> int:
-        """Enqueue one user query; returns a ticket for `result()`."""
+    def submit(self, query: dict, *, tenant: int = 0) -> int:
+        """Enqueue one user query; returns a ticket for `result()`.
+
+        `tenant` tags the ticket for per-tenant accounting (`stats()`);
+        single-tenant front-ends serve every tenant from the one queue.
+        """
+        if self._closed:
+            raise ServerClosedError("submit() on a closed server")
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, query))
+        if tenant != 0:
+            self._tenant_of[ticket] = tenant
+        t = self._per_tenant.setdefault(tenant, {"submitted": 0, "served": 0,
+                                                 "shed": 0, "errors": 0})
+        t["submitted"] += 1
         return ticket
 
-    def result(self, ticket: int) -> ServedQuery:
+    def result(self, ticket: int, *,
+               timeout: float | None = None) -> ServedQuery:
         """Recommendations for `ticket` (flushes the queue if still pending).
 
         Pops the result — each ticket can be redeemed exactly once.
+        `timeout` is accepted for protocol uniformity; the synchronous
+        front-ends resolve every ticket inside `flush()` and never wait.
         """
         if ticket not in self._results:
             self.flush()
         return self._results.pop(ticket)
 
-    def serve_many(self, queries: Sequence[dict]) -> list[ServedQuery]:
+    def serve_many(self, queries: Sequence[dict], *,
+                   tenant: int = 0) -> list[ServedQuery]:
         """Submit, flush, and collect: one ServedQuery per input query,
         in submission order."""
-        tickets = [self.submit(q) for q in queries]
+        tickets = [self.submit(q, tenant=tenant) for q in queries]
         self.flush()
         return [self.result(t) for t in tickets]
 
@@ -136,11 +182,17 @@ class MicroBatcher:
             items = np.asarray(items)
             scores = np.asarray(top.scores)
             for row, (ticket, _) in enumerate(chunk):
-                self._results[ticket] = ServedQuery(
-                    items=items[row], scores=scores[row])
+                self._resolve(ticket, items[row], scores[row])
             self.n_served += len(chunk)
             self.n_padded += bucket - len(chunk)
             self.n_batches += 1
+
+    def _resolve(self, ticket: int, items, scores) -> None:
+        """Record one served ticket (+ its tenant accounting)."""
+        tenant = self._tenant_of.pop(ticket, 0)
+        self._results[ticket] = ServedQuery(items=items, scores=scores,
+                                            tenant=tenant)
+        self._per_tenant[tenant]["served"] += 1
 
     def _stack_np(self, queries: list[dict], bucket: int) -> dict:
         """Stack per-user queries into one padded (bucket, ...) host batch.
@@ -172,12 +224,49 @@ class MicroBatcher:
                 for k, v in self._stack_np(queries, bucket).items()}
 
     # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Flush everything pending, then stop admitting queries.
+
+        Idempotent; `submit()` afterwards raises `ServerClosedError`.
+        Unredeemed tickets stay redeemable through `result()`.
+        """
+        if not self._closed:
+            self.flush()
+            self._closed = True
+
+    def stats(self) -> dict:
+        """The unified `Server` stats schema (see docs/SERVING.md)."""
+        total = self.n_served + self.n_padded
+        return {
+            "mode": self.mode,
+            "closed": self._closed,
+            "n_submitted": self._next_ticket,
+            "n_served": self.n_served,
+            "n_shed": 0,
+            "n_errors": 0,
+            "n_pending": len(self._pending),
+            "n_padded": self.n_padded,
+            "n_batches": self.n_batches,
+            "padding_fraction": self.n_padded / total if total else 0.0,
+            "cache_hits": int(self._stats.hits),
+            "cache_lookups": int(self._stats.lookups),
+            "cache_hit_rate": self._stats.hit_rate(),
+            "per_tenant": {t: dict(v) for t, v in self._per_tenant.items()},
+        }
+
+    # -- pre-protocol accessors (one-release deprecation shims) --------
     @property
     def cache_hit_rate(self) -> float:
-        """Measured hot-cache hit rate over everything served so far."""
+        """Deprecated: use ``stats()["cache_hit_rate"]``."""
+        warnings.warn("MicroBatcher.cache_hit_rate is deprecated; use "
+                      "stats()['cache_hit_rate']", DeprecationWarning,
+                      stacklevel=2)
         return self._stats.hit_rate()
 
     @property
     def padding_fraction(self) -> float:
-        total = self.n_served + self.n_padded
-        return self.n_padded / total if total else 0.0
+        """Deprecated: use ``stats()["padding_fraction"]``."""
+        warnings.warn("MicroBatcher.padding_fraction is deprecated; use "
+                      "stats()['padding_fraction']", DeprecationWarning,
+                      stacklevel=2)
+        return self.stats()["padding_fraction"]

@@ -1,0 +1,367 @@
+"""Concurrent multi-tenant serving tier: bounded queues + a drain thread.
+
+The `AsyncServer` ring overlaps host batching with device compute, but it
+is still a *closed-loop* front-end: one caller, one unbounded queue, and a
+flush that admits everything ever submitted. A datacenter-shaped serving
+tier (the "scale-in" observation: RecSys deployments lose their
+accelerator wins in the serving tier, not the kernels) needs the opposite
+discipline under open-loop load:
+
+  * **per-tenant bounded queues** — each tenant (product surface, shard,
+    or customer) owns a FIFO of at most ``queue_depth`` waiting queries,
+    so one tenant's burst cannot grow another tenant's latency without
+    bound;
+  * **admission control / load shedding** — a submit against a full
+    tenant queue is rejected *immediately* with a ``status="shed"``
+    ticket (accounted per tenant in `stats()`), trading goodput for a
+    bounded p99 instead of collapsing into unbounded queueing latency;
+  * **a single drain thread** — queries are collected round-robin across
+    tenant queues into engine-shaped chunks and served through an inner
+    `AsyncServer` ring (per-shard dispatch: on a query-mesh engine the
+    ring's coalescing lands concurrent buckets on disjoint query blocks).
+    One thread owns every JAX call, so device work stays single-writer
+    while submits stay lock-cheap and thread-safe;
+  * **typed failure containment** — a `ServingError` raised while
+    draining (e.g. a schema-mismatched epoch swap) resolves the affected
+    tickets as ``status="error"`` and the thread keeps draining; nothing
+    in the overload path can kill it.
+
+Bit-for-bit contract (tests/test_server_protocol.py): the admitted stream
+serves byte-identically to the synchronous `MicroBatcher` given the same
+engine — per-query results are independent of bucket composition, so
+threading, interleaving, and shedding move *time and admission*, never
+the bits of an admitted result.
+
+Open-loop measurement hooks: every ticket is timestamped at submit and at
+resolve; `take_trace()` hands the (ticket, tenant, submit_s, done_s,
+status) records to the load harness (`serving/load_gen.py`), which turns
+them into per-tenant p50/p99 latency and shed accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.serving.async_server import AsyncServer
+from repro.serving.batcher import ServedQuery
+from repro.serving.recsys_engine import RecSysEngine
+from repro.serving.server import (
+    STATUS_ERROR,
+    STATUS_OK,
+    STATUS_SHED,
+    QueueFullError,
+    ServerClosedError,
+    ServerConfigError,
+    ServingError,
+)
+
+
+class TicketTrace(NamedTuple):
+    """One completed ticket's lifecycle, for the open-loop load harness."""
+
+    ticket: int
+    tenant: int
+    submit_s: float  # time.perf_counter() at admission
+    done_s: float  # time.perf_counter() at resolution (== submit_s if shed)
+    status: str  # "ok" | "shed" | "error"
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.submit_s
+
+
+class ConcurrentFrontend:
+    """Threaded multi-tenant front-end over an inner `AsyncServer` ring.
+
+    Conforms to the unified `Server` protocol (serving/server.py);
+    construct via ``make_server(engine, mode="concurrent", ...)``.
+
+    Args:
+      engine: the serving engine (local or sharded).
+      tenants: tenant count; tenant ids are ``0..tenants-1``.
+      queue_depth: max waiting queries per tenant queue; a submit beyond
+        it is shed (``None`` = unbounded, never sheds).
+      max_batch / buckets / depth / coalesce: inner `AsyncServer` knobs.
+      drain_chunk: max queries the drain thread collects per cycle
+        (default ``max_batch * depth * coalesce`` — enough to keep the
+        ring full).
+      shed: when False, a full queue raises `QueueFullError` at submit
+        instead of resolving the ticket as shed (closed-loop callers).
+      autostart: start the drain thread at construction (tests pass
+        False to stage deterministic overloads, then call `start()`).
+    """
+
+    mode = "concurrent"
+
+    def __init__(self, engine: RecSysEngine, *, tenants: int = 1,
+                 queue_depth: int | None = 256, max_batch: int = 256,
+                 buckets: Sequence[int] | None = None, depth: int = 2,
+                 coalesce: int | None = None, drain_chunk: int | None = None,
+                 shed: bool = True, autostart: bool = True):
+        if tenants < 1:
+            raise ServerConfigError(f"tenants must be >= 1, got {tenants}")
+        if queue_depth is not None and queue_depth < 1:
+            raise ServerConfigError(
+                f"queue_depth must be >= 1 or None, got {queue_depth}")
+        self._inner = AsyncServer(engine, max_batch=max_batch,
+                                  buckets=buckets, depth=depth,
+                                  coalesce=coalesce)
+        self.tenants = tuple(range(tenants))
+        self.queue_depth = queue_depth
+        self.shed = shed
+        self.drain_chunk = (drain_chunk if drain_chunk is not None else
+                            max_batch * depth * self._inner.coalesce)
+        if self.drain_chunk < 1:
+            raise ServerConfigError(
+                f"drain_chunk must be >= 1, got {self.drain_chunk}")
+
+        self._cv = threading.Condition()
+        self._serve_lock = threading.Lock()  # inner server / engine swaps
+        self._queues: dict[int, deque] = {t: deque() for t in self.tenants}
+        self._per_tenant = {t: {"submitted": 0, "served": 0, "shed": 0,
+                                "errors": 0} for t in self.tenants}
+        self._results: dict[int, ServedQuery] = {}
+        self._outstanding: set[int] = set()
+        self._trace: list[TicketTrace] = []
+        self._next_ticket = 0
+        self._n_inflight = 0  # collected from queues, not yet resolved
+        self._rr = 0  # round-robin start tenant for the next collect
+        self._closed = False
+        self._started = False
+        self._last_error: str | None = None
+        self._thread = threading.Thread(target=self._drain_loop,
+                                        name="serving-drain", daemon=True)
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def submit(self, query: dict, *, tenant: int = 0) -> int:
+        """Admit (or shed) one query into `tenant`'s bounded queue.
+
+        Thread-safe; never blocks on the drain thread. Returns a ticket —
+        shed submissions get a ticket too, already resolved with
+        ``status="shed"``, so accounting and redemption stay uniform.
+        """
+        with self._cv:
+            if self._closed:
+                raise ServerClosedError("submit() on a closed server")
+            if tenant not in self._queues:
+                raise ServerConfigError(
+                    f"unknown tenant {tenant!r}; configured: {self.tenants}")
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._outstanding.add(ticket)
+            self._per_tenant[tenant]["submitted"] += 1
+            now = time.perf_counter()
+            q = self._queues[tenant]
+            if self.queue_depth is not None and len(q) >= self.queue_depth:
+                if not self.shed:
+                    self._outstanding.discard(ticket)
+                    self._per_tenant[tenant]["submitted"] -= 1
+                    raise QueueFullError(
+                        f"tenant {tenant} queue at depth {len(q)}")
+                self._per_tenant[tenant]["shed"] += 1
+                self._results[ticket] = self._sentinel(tenant, STATUS_SHED)
+                self._trace.append(
+                    TicketTrace(ticket, tenant, now, now, STATUS_SHED))
+                self._cv.notify_all()
+                return ticket
+            q.append((ticket, tenant, query, now))
+            self._cv.notify_all()  # wake the drain thread
+            return ticket
+
+    def _sentinel(self, tenant: int, status: str) -> ServedQuery:
+        k = self._inner.engine.top_k
+        return ServedQuery(items=np.full(k, -1, np.int32),
+                           scores=np.zeros(k, np.float32),
+                           status=status, tenant=tenant)
+
+    # ------------------------------------------------------------------
+    # redemption / draining
+    # ------------------------------------------------------------------
+    def result(self, ticket: int, *,
+               timeout: float | None = None) -> ServedQuery:
+        """Block until `ticket` resolves; pops it (redeem exactly once)."""
+        with self._cv:
+            if ticket not in self._outstanding:
+                raise KeyError(f"ticket {ticket} unknown or already redeemed")
+            if not self._cv.wait_for(lambda: ticket in self._results,
+                                     timeout=timeout):
+                raise TimeoutError(f"ticket {ticket} unresolved after "
+                                   f"{timeout}s")
+            self._outstanding.discard(ticket)
+            return self._results.pop(ticket)
+
+    def serve_many(self, queries: Sequence[dict], *,
+                   tenant: int = 0) -> list[ServedQuery]:
+        """Submit, flush, and collect, in submission order (shed tickets
+        come back as ``status="shed"`` sentinels, not exceptions)."""
+        tickets = [self.submit(q, tenant=tenant) for q in queries]
+        self.flush()
+        return [self.result(t) for t in tickets]
+
+    def start(self) -> None:
+        """Start the drain thread (no-op if already running)."""
+        with self._cv:
+            if self._started:
+                return
+            self._started = True
+        self._thread.start()
+
+    def flush(self) -> None:
+        """Block until every admitted query has resolved its ticket."""
+        self.start()
+        with self._cv:
+            self._cv.wait_for(
+                lambda: self._n_queued() == 0 and self._n_inflight == 0)
+
+    def close(self) -> None:
+        """Drain everything admitted, then stop; idempotent, no deadlock.
+
+        In-flight and queued tickets are resolved (served, not shed)
+        before the drain thread exits; they stay redeemable afterwards.
+        `submit()` raises `ServerClosedError` once close() begins.
+        """
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self.start()  # a never-started frontend still drains its queues
+        self._thread.join(timeout=120)
+        if self._thread.is_alive():  # pragma: no cover - defensive
+            raise ServingError("drain thread failed to stop within 120s")
+        with self._serve_lock:
+            self._inner.close()
+
+    def _n_queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _collect_locked(self, limit: int) -> list:
+        """Round-robin up to `limit` queued entries across tenant queues.
+
+        Fair interleave: one query per non-empty tenant per cycle, so a
+        backlogged tenant cannot starve the others between drains.
+        """
+        batch: list = []
+        n = len(self.tenants)
+        while len(batch) < limit:
+            took = False
+            for k in range(n):
+                if len(batch) >= limit:
+                    break
+                q = self._queues[self.tenants[(self._rr + k) % n]]
+                if q:
+                    batch.append(q.popleft())
+                    took = True
+            if not took:
+                break
+        self._rr = (self._rr + 1) % n
+        return batch
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                self._cv.wait_for(
+                    lambda: self._closed or self._n_queued() > 0)
+                batch = self._collect_locked(self.drain_chunk)
+                if not batch:
+                    if self._closed:
+                        return
+                    continue  # pragma: no cover - spurious wakeup
+                self._n_inflight += len(batch)
+            served = None
+            try:
+                with self._serve_lock:
+                    tickets = [self._inner.submit(q)
+                               for (_, _, q, _) in batch]
+                    self._inner.flush()
+                    served = [self._inner.result(t) for t in tickets]
+            except ServingError as e:
+                self._contain(e)  # typed: surface through the tickets
+            except Exception as e:  # defensive: the thread must survive
+                self._contain(e)
+            done = time.perf_counter()
+            with self._cv:
+                for i, (ticket, tenant, _, t_sub) in enumerate(batch):
+                    if served is not None:
+                        self._results[ticket] = dataclasses.replace(
+                            served[i], tenant=tenant)
+                        self._per_tenant[tenant]["served"] += 1
+                        status = STATUS_OK
+                    else:
+                        self._results[ticket] = self._sentinel(
+                            tenant, STATUS_ERROR)
+                        self._per_tenant[tenant]["errors"] += 1
+                        status = STATUS_ERROR
+                    self._trace.append(
+                        TicketTrace(ticket, tenant, t_sub, done, status))
+                self._n_inflight -= len(batch)
+                self._cv.notify_all()
+
+    def _contain(self, exc: Exception) -> None:
+        """Reset the inner server after a drain failure (tickets resolve
+        as ``status="error"``; the thread keeps serving later chunks)."""
+        self._last_error = f"{type(exc).__name__}: {exc}"
+        with self._serve_lock:
+            self._inner._pending = []
+            self._inner._ring.clear()
+            self._inner._results.clear()
+
+    # ------------------------------------------------------------------
+    # engine swaps / stats / trace
+    # ------------------------------------------------------------------
+    @property
+    def engine(self):
+        return self._inner.engine
+
+    def swap_engine(self, engine: RecSysEngine) -> None:
+        """Epoch swap between drain chunks (LiveCatalog publication point).
+
+        Serializes against the drain thread: the swap lands between inner
+        flushes, so a chunk is always entirely one epoch. A schema change
+        raises `SchemaMismatchError` to the *caller*; the drain thread is
+        untouched.
+        """
+        with self._serve_lock:
+            self._inner.swap_engine(engine)
+
+    def take_trace(self) -> list[TicketTrace]:
+        """Return and clear the completed-ticket trace (load harness)."""
+        with self._cv:
+            out, self._trace = self._trace, []
+            return out
+
+    def stats(self) -> dict:
+        """The unified `Server` stats schema + tenant/queue accounting."""
+        with self._cv:
+            inner = self._inner.stats()
+            per_tenant = {t: dict(v) for t, v in self._per_tenant.items()}
+            out = {
+                "mode": self.mode,
+                "closed": self._closed,
+                "n_submitted": self._next_ticket,
+                "n_served": inner["n_served"],
+                "n_shed": sum(v["shed"] for v in per_tenant.values()),
+                "n_errors": sum(v["errors"] for v in per_tenant.values()),
+                "n_pending": self._n_queued() + self._n_inflight,
+                "n_padded": inner["n_padded"],
+                "n_batches": inner["n_batches"],
+                "padding_fraction": inner["padding_fraction"],
+                "cache_hits": inner["cache_hits"],
+                "cache_lookups": inner["cache_lookups"],
+                "cache_hit_rate": inner["cache_hit_rate"],
+                "per_tenant": per_tenant,
+                "queue_depth": self.queue_depth,
+                "queued_now": {t: len(q) for t, q in self._queues.items()},
+                "depth": inner["depth"],
+                "coalesce": inner["coalesce"],
+                "drain_chunk": self.drain_chunk,
+                "last_error": self._last_error,
+            }
+            return out

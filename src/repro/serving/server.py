@@ -1,0 +1,157 @@
+"""One serving API for every front-end: the `Server` protocol + factory.
+
+The serving tier grew three front-ends — the synchronous `MicroBatcher`,
+the pipelined `AsyncServer` ring, and the threaded multi-tenant
+`ConcurrentFrontend` — and three front-ends must not mean three divergent
+submit/ticket/flush APIs. This module pins the one contract they all
+implement and the one constructor call sites use:
+
+    server = make_server(engine, mode="sync" | "pipelined" | "concurrent")
+    ticket = server.submit(query, tenant=0)   # -> opaque int ticket
+    served = server.result(ticket)            # ServedQuery(items, scores,
+                                              #             status, tenant)
+    server.flush()                            # drain everything submitted
+    server.stats()                            # one dict schema, all modes
+    server.close()                            # idempotent; submit() after
+                                              # close raises ServerClosedError
+
+Tickets are redeemed exactly once and `result()` never raises for an
+overloaded request: admission failures come back as a ServedQuery whose
+``status`` is ``"shed"`` (and drain-side typed failures as ``"error"``),
+so a load-shedding path is an accounted outcome, not an exception that
+kills a drain thread. Every *configuration* error, by contrast, is a typed
+exception from the `ServingError` family below.
+
+Bit-for-bit contract (tested in tests/test_server_protocol.py): for the
+same engine and the same admitted query stream, every mode returns
+identical items, scores, and hot-cache counters — front-ends move *time*
+(batching, pipelining, threading), never results.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+if TYPE_CHECKING:  # pragma: no cover - type-only import, avoids a cycle
+    from repro.serving.batcher import ServedQuery
+
+
+# ---------------------------------------------------------------------------
+# ticket status values (ServedQuery.status)
+# ---------------------------------------------------------------------------
+STATUS_OK = "ok"  # served by the engine
+STATUS_SHED = "shed"  # rejected at admission (tenant queue full)
+STATUS_ERROR = "error"  # typed serving failure surfaced through the ticket
+
+
+# ---------------------------------------------------------------------------
+# typed exceptions — the serving layer never raises bare asserts
+# ---------------------------------------------------------------------------
+class ServingError(RuntimeError):
+    """Base class for every typed serving-tier failure."""
+
+
+class ServerConfigError(ServingError, ValueError):
+    """A front-end was constructed or called with invalid knobs."""
+
+
+class SchemaMismatchError(ServingError, ValueError):
+    """`swap_engine` was handed an engine with a different query schema.
+
+    Subclasses ValueError so pre-protocol callers catching ValueError keep
+    working (one-release compatibility; catch `SchemaMismatchError`)."""
+
+
+class ServerClosedError(ServingError):
+    """submit() after close() — the server no longer admits queries."""
+
+
+class QueueFullError(ServingError):
+    """A bounded tenant queue is full and shedding is disabled."""
+
+
+@runtime_checkable
+class Server(Protocol):
+    """The unified front-end contract (structural; see module docstring).
+
+    `MicroBatcher` (mode="sync"), `AsyncServer` (mode="pipelined"), and
+    `ConcurrentFrontend` (mode="concurrent") all conform; the parity suite
+    in tests/test_server_protocol.py runs one query stream through all
+    three and asserts bit-identical results and counters.
+    """
+
+    def submit(self, query: dict, *, tenant: int = 0) -> int:
+        """Enqueue one user query; returns a ticket for `result()`."""
+        ...
+
+    def result(self, ticket: int, *, timeout: float | None = None
+               ) -> "ServedQuery":
+        """Redeem `ticket` (exactly once); blocks/flushes until resolved."""
+        ...
+
+    def serve_many(self, queries, *, tenant: int = 0) -> list["ServedQuery"]:
+        """Submit + flush + collect, in submission order."""
+        ...
+
+    def flush(self) -> None:
+        """Drain every submitted query to a resolved ticket."""
+        ...
+
+    def close(self) -> None:
+        """Flush, then stop admitting queries (idempotent)."""
+        ...
+
+    def stats(self) -> dict:
+        """One stats schema for every mode (see docs/SERVING.md)."""
+        ...
+
+    def swap_engine(self, engine) -> None:
+        """Atomically swap engine epochs between buckets (LiveCatalog)."""
+        ...
+
+
+_MODES = ("sync", "pipelined", "concurrent")
+
+
+def make_server(engine, mode: str = "sync", **knobs) -> "Server":
+    """Construct a serving front-end by mode — the one public entry point.
+
+    Args:
+      engine: the `RecSysEngine` to serve from (local or sharded).
+      mode: ``"sync"`` (MicroBatcher: one bucket at a time),
+        ``"pipelined"`` (AsyncServer: depth-N ring of in-flight buckets),
+        or ``"concurrent"`` (ConcurrentFrontend: per-tenant bounded queues
+        draining through a thread into the pipelined ring, with admission
+        control and load shedding).
+      **knobs: mode-scoped keyword knobs —
+        every mode: ``max_batch``, ``buckets``;
+        pipelined + concurrent: ``depth``, ``coalesce``;
+        concurrent only: ``tenants``, ``queue_depth``, ``drain_chunk``,
+        ``shed``, ``autostart``.
+        An unknown knob (or a knob outside its mode) raises
+        `ServerConfigError` instead of being silently ignored.
+
+    Returns:
+      a `Server`-conforming front-end.
+    """
+    from repro.serving.async_server import AsyncServer
+    from repro.serving.batcher import MicroBatcher
+    from repro.serving.frontend import ConcurrentFrontend
+
+    classes = {"sync": MicroBatcher, "pipelined": AsyncServer,
+               "concurrent": ConcurrentFrontend}
+    allowed = {
+        "sync": {"max_batch", "buckets"},
+        "pipelined": {"max_batch", "buckets", "depth", "coalesce"},
+        "concurrent": {"max_batch", "buckets", "depth", "coalesce",
+                       "tenants", "queue_depth", "drain_chunk", "shed",
+                       "autostart"},
+    }
+    if mode not in _MODES:
+        raise ServerConfigError(
+            f"unknown serving mode {mode!r}; expected one of {_MODES}")
+    extra = set(knobs) - allowed[mode]
+    if extra:
+        raise ServerConfigError(
+            f"knobs {sorted(extra)} are not valid for mode={mode!r} "
+            f"(allowed: {sorted(allowed[mode])})")
+    return classes[mode](engine, **knobs)

@@ -141,7 +141,7 @@ def test_batcher_buckets_and_order(served):
     # recommendations (determinism across bucket shapes)
     np.testing.assert_array_equal(out[0].items, out[7].items)
     np.testing.assert_array_equal(out[7].items, out[14].items)
-    assert 0.0 <= mb.cache_hit_rate <= 1.0 and mb.n_served == 19
+    assert 0.0 <= mb.stats()["cache_hit_rate"] <= 1.0 and mb.n_served == 19
 
 
 def test_padding_rows_excluded_from_cache_stats(served):

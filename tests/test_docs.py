@@ -16,21 +16,29 @@ def _public_api():
     from repro.kernels import ops
     from repro.serving import (
         AsyncServer,
+        ConcurrentFrontend,
         DeltaShard,
         LiveCatalog,
+        LoadGen,
         MicroBatcher,
         RecSysEngine,
+        Server,
         async_server,
         batcher,
         catalog,
         filter_step,
+        frontend,
         hot_cache,
+        load_gen,
         lookup_step,
+        make_server,
         rank_stage_step,
         rank_step,
         recsys_engine,
         scan_step,
         serve_step,
+        server,
+        summarize_trace,
     )
 
     return [
@@ -81,6 +89,26 @@ def _public_api():
         ("AsyncServer", AsyncServer),
         ("AsyncServer.flush", AsyncServer.flush),
         ("AsyncServer.in_flight", AsyncServer.in_flight.fget),
+        # the unified Server API + concurrent tier + load harness
+        ("serving.server", server),
+        ("serving.frontend", frontend),
+        ("serving.load_gen", load_gen),
+        ("Server", Server),
+        ("make_server", make_server),
+        ("MicroBatcher.close", MicroBatcher.close),
+        ("MicroBatcher.stats", MicroBatcher.stats),
+        ("ConcurrentFrontend", ConcurrentFrontend),
+        ("ConcurrentFrontend.submit", ConcurrentFrontend.submit),
+        ("ConcurrentFrontend.result", ConcurrentFrontend.result),
+        ("ConcurrentFrontend.flush", ConcurrentFrontend.flush),
+        ("ConcurrentFrontend.close", ConcurrentFrontend.close),
+        ("ConcurrentFrontend.stats", ConcurrentFrontend.stats),
+        ("ConcurrentFrontend.swap_engine", ConcurrentFrontend.swap_engine),
+        ("ConcurrentFrontend.take_trace", ConcurrentFrontend.take_trace),
+        ("LoadGen", LoadGen),
+        ("LoadGen.schedule", LoadGen.schedule),
+        ("LoadGen.replay", LoadGen.replay),
+        ("summarize_trace", summarize_trace),
         # jitted steps (fused + staged)
         ("serve_step", serve_step),
         ("filter_step", filter_step),

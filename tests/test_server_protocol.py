@@ -1,0 +1,385 @@
+"""The unified Server API: one protocol, one factory, three front-ends.
+
+Every front-end constructed through `make_server` must serve the same
+stream to the same bits (items, scores, AND cache counters) — the mode is
+an execution knob, never a results knob. The concurrent front-end
+additionally owns the overload contract: a full tenant queue sheds (with
+per-tenant accounting, as resolved sentinel tickets — never an exception
+out of `result()` and never a dead drain thread), close() with in-flight
+tickets drains instead of deadlocking, and engine-swap/serve races stay
+serialized. Typed exceptions (`ServingError` family) carry the rest."""
+import threading
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.data.synthetic import serving_queries as _queries
+from repro.models import recsys as rs
+from repro.serving import (
+    STATUS_ERROR,
+    STATUS_OK,
+    STATUS_SHED,
+    ConcurrentFrontend,
+    LoadGen,
+    QueueFullError,
+    RecSysEngine,
+    SchemaMismatchError,
+    Server,
+    ServerClosedError,
+    ServerConfigError,
+    ServingError,
+    make_server,
+    summarize_trace,
+)
+
+MODES = ("sync", "pipelined", "concurrent")
+
+
+@pytest.fixture(scope="module")
+def served():
+    data = synthetic.make_movielens(n_users=120, n_items=90, history_len=6)
+    cfg = rs.YoutubeDNNConfig(
+        n_items=data.n_items,
+        user_features={"user_id": data.n_users, "gender": 3, "age": 7,
+                       "occupation": 21, "zip_bucket": 250},
+        history_len=6)
+    params = rs.init_youtubednn(jax.random.key(0), cfg)
+    freqs = np.bincount(data.histories[data.histories >= 0],
+                        minlength=data.n_items)
+    engine = RecSysEngine.build(params, cfg, radius=112, n_candidates=16,
+                                top_k=5, hot_rows=32, item_freqs=freqs)
+    return engine, data
+
+
+def _make(engine, mode, **knobs):
+    knobs.setdefault("max_batch", 8)
+    if mode == "concurrent":
+        knobs.setdefault("tenants", 4)
+    return make_server(engine, mode, **knobs)
+
+
+def _stream(data, n=19):
+    return _queries(data, np.arange(n) % 7)
+
+
+# ---------------------------------------------------------------------------
+# the factory
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", MODES)
+def test_factory_builds_protocol_instances(served, mode):
+    """Every mode satisfies the structural `Server` protocol and reports
+    itself in stats()."""
+    engine, _ = served
+    server = _make(engine, mode)
+    assert isinstance(server, Server)
+    assert server.mode == mode
+    st = server.stats()
+    assert st["mode"] == mode and st["n_submitted"] == 0
+    server.close()
+    assert server.stats()["closed"]
+
+
+def test_factory_rejects_unknown_mode_and_knobs(served):
+    engine, _ = served
+    with pytest.raises(ServerConfigError, match="unknown serving mode"):
+        make_server(engine, "warp")
+    # knob valid for one mode is rejected for another, with the mode named
+    with pytest.raises(ServerConfigError, match="sync"):
+        make_server(engine, "sync", depth=2)
+    with pytest.raises(ServerConfigError, match="tenants"):
+        make_server(engine, "pipelined", tenants=4)
+    # config errors are also ValueErrors (one release of back-compat)
+    with pytest.raises(ValueError):
+        make_server(engine, "concurrent", bogus_knob=1)
+
+
+# ---------------------------------------------------------------------------
+# parity: one stream, three front-ends, identical bits
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ("pipelined", "concurrent"))
+def test_modes_bitmatch_sync(served, mode):
+    """items, scores, and hot-cache counters all match the sync path —
+    mixed full + padded-tail buckets included."""
+    engine, data = served
+    stream = _stream(data)
+    ref = _make(engine, "sync")
+    want = ref.serve_many(stream)
+    server = _make(engine, mode)
+    got = server.serve_many(stream)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w.items, g.items)
+        np.testing.assert_array_equal(w.scores, g.scores)
+        assert g.status == STATUS_OK and g.ok
+    for key in ("n_served", "n_padded", "n_batches",
+                "cache_hits", "cache_lookups"):
+        assert server.stats()[key] == ref.stats()[key], key
+    server.close()
+    ref.close()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_ticket_api_and_tenant_accounting(served, mode):
+    """submit/result round-trips per tenant; per_tenant stats account every
+    ticket; redeeming twice raises KeyError in every mode."""
+    engine, data = served
+    server = _make(engine, mode)
+    stream = _stream(data, 6)
+    tickets = [server.submit(q, tenant=i % 2) for i, q in enumerate(stream)]
+    server.flush()
+    ref = _make(engine, "sync").serve_many(stream)
+    for i, (t, w) in enumerate(zip(tickets, ref)):
+        got = server.result(t, timeout=30.0)
+        np.testing.assert_array_equal(got.items, w.items)
+        assert got.tenant == i % 2
+    pt = server.stats()["per_tenant"]
+    assert pt[0]["served"] == 3 and pt[1]["served"] == 3
+    with pytest.raises(KeyError):
+        server.result(tickets[0])
+    server.close()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_closed_server_rejects_submits(served, mode):
+    engine, data = served
+    server = _make(engine, mode)
+    server.close()
+    with pytest.raises(ServerClosedError):
+        server.submit(_stream(data, 1)[0])
+    server.close()  # idempotent
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_swap_engine_schema_mismatch_is_typed(served, mode):
+    """A schema-mismatched swap raises SchemaMismatchError (a ValueError,
+    for one release of back-compat) and leaves the server serving."""
+    engine, data = served
+    cfg2 = rs.YoutubeDNNConfig(
+        n_items=data.n_items, user_features={"user_id": data.n_users},
+        history_len=6)
+    other = RecSysEngine.build(rs.init_youtubednn(jax.random.key(1), cfg2),
+                               cfg2, radius=112, n_candidates=16, top_k=5)
+    server = _make(engine, mode)
+    with pytest.raises(SchemaMismatchError, match="schema"):
+        server.swap_engine(other)
+    assert isinstance(SchemaMismatchError("x"), ValueError)
+    out = server.serve_many(_stream(data, 3))
+    assert all(s.ok for s in out)
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# overload: shedding, accounting, no deadlock
+# ---------------------------------------------------------------------------
+def test_full_queue_sheds_with_accounting(served):
+    """With the drain thread parked, submits beyond queue_depth shed:
+    resolved sentinel tickets (items all -1), per-tenant shed counts, and
+    the survivors still serve exact results after start()."""
+    engine, data = served
+    server = _make(engine, "concurrent", queue_depth=4, autostart=False)
+    stream = _stream(data)
+    tickets = [server.submit(q) for q in stream]
+    st = server.stats()
+    assert st["per_tenant"][0]["shed"] == len(stream) - 4
+    server.start()
+    server.flush()
+    ref = _make(engine, "sync").serve_many(stream[:4])
+    got = [server.result(t, timeout=30.0) for t in tickets]
+    for g, w in zip(got[:4], ref):
+        assert g.status == STATUS_OK
+        np.testing.assert_array_equal(g.items, w.items)
+    for g in got[4:]:
+        assert g.status == STATUS_SHED and not g.ok
+        assert (g.items == -1).all() and (g.scores == 0).all()
+    st = server.stats()
+    pt = st["per_tenant"][0]
+    assert pt["submitted"] == len(stream)
+    assert pt["served"] + pt["shed"] + pt["errors"] == len(stream)
+    trace = server.take_trace()
+    assert sum(r.status == STATUS_SHED for r in trace) == len(stream) - 4
+    server.close()
+
+
+def test_shed_false_raises_queue_full(served):
+    engine, data = served
+    server = _make(engine, "concurrent", queue_depth=2, shed=False,
+                   autostart=False)
+    q = _stream(data, 1)[0]
+    server.submit(q)
+    server.submit(q)
+    with pytest.raises(QueueFullError):
+        server.submit(q)
+    server.start()
+    server.close()
+
+
+def test_close_with_inflight_tickets_drains(served):
+    """close() with queued + in-flight work drains everything (no deadlock,
+    no lost tickets) — even when the drain thread was never started."""
+    engine, data = served
+    stream = _stream(data, 9)
+    for autostart in (True, False):
+        server = _make(engine, "concurrent", autostart=autostart)
+        tickets = [server.submit(q, tenant=i % 3)
+                   for i, q in enumerate(stream)]
+        server.close()
+        got = [server.result(t, timeout=30.0) for t in tickets]
+        assert all(g.status == STATUS_OK for g in got)
+        ref = _make(engine, "sync").serve_many(stream)
+        for g, w in zip(got, ref):
+            np.testing.assert_array_equal(g.items, w.items)
+
+
+def test_drain_thread_survives_engine_errors(served):
+    """An exception inside the serve path resolves that batch's tickets as
+    status=error sentinels and keeps the thread alive for later submits —
+    overload or poison queries must never kill the drain loop."""
+    engine, data = served
+    server = _make(engine, "concurrent", autostart=False)
+    stream = _stream(data, 4)
+    boom = ServingError("injected serve failure")
+    real_inner = server._inner
+
+    class _Exploding:
+        # the containment path resets these after a failure; give it the
+        # real attributes so the reset itself cannot raise
+        engine = real_inner.engine
+        _pending: list = []
+        _ring = deque()
+        _results: dict = {}
+
+        def submit(self, q):
+            raise boom
+
+    server._inner = _Exploding()
+    bad = [server.submit(q) for q in stream]
+    server.start()
+    server.flush()
+    got = [server.result(t, timeout=30.0) for t in bad]
+    assert all(g.status == STATUS_ERROR for g in got)
+    # the thread is still draining: restore the real inner and serve
+    server._inner = real_inner
+    st = server.stats()
+    assert st["last_error"] == "ServingError: injected serve failure"
+    assert st["per_tenant"][0]["errors"] == len(stream)
+    ok = [server.submit(q) for q in stream]
+    server.flush()
+    ref = _make(engine, "sync").serve_many(stream)
+    for t, w in zip(ok, ref):
+        g = server.result(t, timeout=30.0)
+        assert g.status == STATUS_OK
+        np.testing.assert_array_equal(g.items, w.items)
+    server.close()
+
+
+def test_concurrent_submitters_one_drain(served):
+    """Many submitting threads against one front-end: every ticket resolves
+    to the exact sync result for its own query (ticket fan-out is
+    thread-safe even though all JAX work stays on the one drain thread)."""
+    engine, data = served
+    server = _make(engine, "concurrent", tenants=4, queue_depth=64)
+    stream = _stream(data, 8)
+    ref = _make(engine, "sync").serve_many(stream)
+    results = {}
+
+    def worker(tenant):
+        ts = [server.submit(q, tenant=tenant) for q in stream]
+        server.flush()
+        results[tenant] = [server.result(t, timeout=30.0) for t in ts]
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60)
+        assert not th.is_alive(), "submitter deadlocked"
+    for tenant, got in results.items():
+        assert [g.tenant for g in got] == [tenant] * len(stream)
+        for g, w in zip(got, ref):
+            assert g.status == STATUS_OK
+            np.testing.assert_array_equal(g.items, w.items)
+            np.testing.assert_array_equal(g.scores, w.scores)
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+def test_deprecated_properties_warn_and_match_stats(served):
+    engine, data = served
+    server = _make(engine, "sync")
+    server.serve_many(_stream(data))
+    with pytest.warns(DeprecationWarning, match="stats"):
+        hit = server.cache_hit_rate
+    with pytest.warns(DeprecationWarning, match="stats"):
+        pad = server.padding_fraction
+    st = server.stats()
+    assert hit == st["cache_hit_rate"] and pad == st["padding_fraction"]
+
+
+# ---------------------------------------------------------------------------
+# load generator
+# ---------------------------------------------------------------------------
+def test_load_gen_schedule_is_deterministic():
+    mk = lambda: LoadGen(rate_qps=200, duration_s=0.5, tenants=2,
+                         pool_size=32, zipf_a=1.2, seed=7).schedule()
+    a, b = mk(), mk()
+    assert a == b and len(a) > 0
+    assert {t for _, t, _ in a} == {0, 1}
+    assert all(0 <= qi < 32 for _, _, qi in a)
+    assert all(x[0] <= y[0] for x, y in zip(a, a[1:]))
+
+
+def test_load_gen_zipf_skews_and_burst_raises_rate():
+    sched = LoadGen(rate_qps=2000, duration_s=1.0, pool_size=64,
+                    zipf_a=1.3, seed=0).schedule()
+    qs = [qi for _, _, qi in sched]
+    assert qs.count(0) > qs.count(32)  # rank-1 beats the tail
+    base = LoadGen(rate_qps=500, duration_s=2.0, pool_size=8, seed=1)
+    burst = LoadGen(rate_qps=500, duration_s=2.0, pool_size=8, seed=1,
+                    burst=(0.5, 0.25, 4.0))
+    # 25% duty at 4x + 75% at 1x -> ~1.75x the base arrivals
+    ratio = len(burst.schedule()) / len(base.schedule())
+    assert 1.4 < ratio < 2.1
+    with pytest.raises(ServerConfigError, match="burst"):
+        LoadGen(rate_qps=1, duration_s=1, pool_size=1, burst=(0, 1, 1))
+
+
+def test_load_gen_replay_and_summary(served):
+    """Replay through the concurrent front-end: the trace accounts every
+    arrival, the summary's tenants partition it, and every admitted ticket
+    bit-matches the sync serve of its own pool query."""
+    engine, data = served
+    pool = _queries(data, np.arange(16))
+    gen = LoadGen(rate_qps=400, duration_s=0.3, tenants=2, pool_size=16,
+                  seed=3)
+    server = _make(engine, "concurrent", tenants=2, queue_depth=64)
+    server.serve_many(pool[:8])  # compile off the trace
+    server.take_trace()
+    replay = gen.replay(server, pool)
+    server.flush()
+    trace = server.take_trace()
+    assert len(trace) == len(replay) == len(gen.schedule())
+    summary = summarize_trace(trace, gen.duration_s)
+    assert set(summary.per_tenant) == {0, 1}
+    assert summary.shed_frac + summary.error_frac < 1.0
+    ref = _make(engine, "sync").serve_many(pool)
+    for ticket, tenant, qi in replay:
+        got = server.result(ticket, timeout=30.0)
+        assert got.tenant == tenant
+        if got.status == STATUS_OK:
+            np.testing.assert_array_equal(got.items, ref[qi].items)
+            np.testing.assert_array_equal(got.scores, ref[qi].scores)
+    server.close()
+
+
+def test_frontend_direct_construction_still_supported(served):
+    """`ConcurrentFrontend` remains importable/constructible for library
+    users; make_server is the porcelain, not a gate."""
+    engine, data = served
+    fe = ConcurrentFrontend(engine, tenants=2, max_batch=8)
+    out = fe.serve_many(_stream(data, 3), tenant=1)
+    assert all(s.ok and s.tenant == 1 for s in out)
+    fe.close()

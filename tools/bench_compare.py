@@ -8,9 +8,11 @@ them — files pair up by benchmark name) and it prints a side-by-side table
 with each side's provenance (git sha + timestamp, stamped by the shared
 writer) and exits non-zero on any regression beyond the threshold.
 
-A row regresses when its qps drops by more than ``--threshold`` (default
-10%), or — for rows without a qps figure — when ``us_per_call`` rises by
-more than the threshold. Rows carry an ``ok=False`` style self-check in
+A row regresses when its throughput metric drops by more than
+``--threshold`` (default 10%), or its latency metric rises by more than
+it. Per row, the first metric present wins: ``qps_at_slo=`` (the load
+harness's provisioning number), then ``qps=``, then ``p99_ms=`` (tail
+latency, lower is better), then the ``us_per_call`` column. Rows carry an ``ok=False`` style self-check in
 ``derived`` sometimes; those are the benchmark's own gates and are not
 re-judged here. Rows present on only one side are listed but never fail
 the diff (benchmarks grow cells over time).
@@ -30,7 +32,14 @@ import re
 import sys
 from pathlib import Path
 
-_QPS = re.compile(r"(?:^|;)qps=([0-9.eE+-]+)")
+# per-row metric, first match wins: throughput (higher better) before
+# latency (lower better); anchored so e.g. achieved_qps= never parses as
+# qps= and p50_ms= never parses as p99_ms=
+_METRICS = (
+    ("qps_at_slo", re.compile(r"(?:^|;)qps_at_slo=([0-9.eE+-]+)"), False),
+    ("qps", re.compile(r"(?:^|;)qps=([0-9.eE+-]+)"), False),
+    ("p99_ms", re.compile(r"(?:^|;)p99_ms=([0-9.eE+-]+)"), True),
+)
 
 
 def load_artifacts(path: Path) -> dict[str, dict]:
@@ -47,15 +56,24 @@ def load_artifacts(path: Path) -> dict[str, dict]:
 
 
 def row_metric(row: dict):
-    """(kind, value) — ('qps', v) if the derived string carries one,
-    else ('us_per_call', v); (None, None) when neither is usable."""
-    m = _QPS.search(row.get("derived", "") or "")
-    if m:
-        return "qps", float(m.group(1))
+    """(kind, value) — the first `_METRICS` field the derived string
+    carries, else ('us_per_call', v); (None, None) when none is usable."""
+    derived = row.get("derived", "") or ""
+    for kind, rx, _ in _METRICS:
+        m = rx.search(derived)
+        if m:
+            v = float(m.group(1))
+            if v == v:  # NaN (e.g. p99 of an all-shed run) is not comparable
+                return kind, v
     us = row.get("us_per_call")
     if isinstance(us, (int, float)) and us > 0:
         return "us_per_call", float(us)
     return None, None
+
+
+def metric_lower_is_better(kind: str) -> bool:
+    return kind == "us_per_call" or any(
+        k == kind and lower for k, _, lower in _METRICS)
 
 
 def provenance(payload: dict) -> str:
@@ -79,14 +97,13 @@ def compare_bench(name: str, old: dict, new: dict, threshold: float):
         if kind is None or kind != kind2:
             yield row_name, "skip", "no comparable metric", False
             continue
-        if kind == "qps":
-            ratio = now / was if was else float("inf")
-            bad = ratio < 1.0 - threshold
-            detail = f"qps {was:.0f} -> {now:.0f} ({ratio:.2f}x)"
-        else:
-            ratio = now / was if was else float("inf")
+        ratio = now / was if was else float("inf")
+        if metric_lower_is_better(kind):
             bad = ratio > 1.0 + threshold
-            detail = f"us/call {was:.1f} -> {now:.1f} ({ratio:.2f}x)"
+            detail = f"{kind} {was:.1f} -> {now:.1f} ({ratio:.2f}x)"
+        else:
+            bad = ratio < 1.0 - threshold
+            detail = f"{kind} {was:.0f} -> {now:.0f} ({ratio:.2f}x)"
         yield row_name, ("REGRESSION" if bad else "ok"), detail, bad
 
 
