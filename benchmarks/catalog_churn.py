@@ -20,6 +20,11 @@ and then exercises the epoch machinery:
     between buckets, so this is *amortized* — not a serving stall);
   * post-compaction bit-match vs a **cold rebuild** from the final table
     (`rebuild_reference`), asserted over the whole probe stream;
+  * block-summary soundness across churn: the incrementally-maintained
+    `BlockSummary` must equal a cold `build_block_summary` over the final
+    (sigs, mask) bitwise — before AND after compaction — and the
+    post-compaction pruned scan must serve the exact bits of a
+    prune-disabled engine (asserted, not sampled);
   * an epoch swap under the `AsyncServer` ring at depth `--depth`:
     every query of the stream is asserted to equal exactly the epoch it
     was dispatched against — old epoch before the swap, new epoch after,
@@ -99,9 +104,29 @@ def _assert_stream_equal(got, want, label):
         raise AssertionError(f"{label}: served stream diverged")
 
 
+def _assert_summary_sound(engine, label):
+    """The engine's incrementally-maintained BlockSummary must be bitwise
+    identical to a cold rebuild over the same (sigs, tombstone mask) — the
+    update_block_summary maintenance contract (docs/KERNELS.md)."""
+    import numpy as np
+
+    from repro.core.nns import build_block_summary
+
+    cold = build_block_summary(np.asarray(engine.item_sigs),
+                               engine.block_summary.block_rows,
+                               db_mask=np.asarray(engine.item_mask))
+    for f in ("or_sigs", "and_sigs", "min_pc", "max_pc", "n_alive"):
+        if not (np.asarray(getattr(engine.block_summary, f))
+                == np.asarray(getattr(cold, f))).all():
+            raise AssertionError(
+                f"{label}: summary field {f} diverged from cold rebuild")
+
+
 def rows(items: int, n_queries: int, batch: int, wave: int,
          dirty_frac: float, updates_per_wave: int, scan_block: int | None,
          depth: int, repeats: int = 2):
+    import dataclasses
+
     import numpy as np
 
     from repro.data.synthetic import serving_queries
@@ -176,6 +201,7 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
     _assert_stream_equal(np.stack([s.items for s in live_out]),
                          np.stack([s.items for s in ref_pre]),
                          "delta path vs cold rebuild")
+    _assert_summary_sound(cat.engine, "pre-compaction, churned")
 
     # -- compaction: pause + post-fold bit-match vs cold rebuild --------
     pause_s = cat.compact()
@@ -187,10 +213,18 @@ def rows(items: int, n_queries: int, batch: int, wave: int,
     _assert_stream_equal(np.stack([s.items for s in post]),
                          np.stack([s.items for s in live_out]),
                          "compaction changed served bits")
+    _assert_summary_sound(cat.engine, "post-compaction")
+    # the post-compact pruned scan serves the exact unpruned bits
+    unpruned = sync_server(dataclasses.replace(
+        cat.engine, prune=False)).serve_many(probe)
+    _assert_stream_equal(np.stack([s.items for s in post]),
+                         np.stack([s.items for s in unpruned]),
+                         "post-compaction pruned vs prune-disabled")
     out.append((
         f"serving/churn/compact_{items}", pause_s * 1e6,
         f"pause_ms={pause_s * 1e3:.1f};epoch={cat.epoch};"
-        f"bitmatch_cold_rebuild=True"))
+        f"bitmatch_cold_rebuild=True;summary_bitmatch_cold=True;"
+        f"pruned_eq_unpruned=True"))
 
     # -- epoch swap under the pipelined ring: never stale, never mixed --
     k = min(updates_per_wave, n_dirty)

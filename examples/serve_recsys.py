@@ -20,6 +20,13 @@ Every front-end is constructed through the one factory —
 
   PYTHONPATH=src python examples/serve_recsys.py [--queries 2000]
       [--mode sync|pipelined|concurrent] [--depth 2]
+      [--prune on|off|auto] [--scan-block N]
+
+``--prune`` drives the engine's block-summary pruning knob (`auto` prunes
+whenever the scan streams; results are bit-identical either way) and
+``--scan-block`` forces the streaming plan — the demo catalog is small
+enough to route dense by default, where pruning never engages. The summary
+line reports the mean summary blocks touched per query on a sample batch.
 """
 import argparse
 import time
@@ -46,6 +53,13 @@ def main():
                     help="deprecated alias for --mode pipelined")
     ap.add_argument("--depth", type=int, default=2,
                     help="in-flight ring depth (pipelined/concurrent)")
+    ap.add_argument("--prune", choices=("on", "off", "auto"), default="auto",
+                    help="block-summary pruning: on/off/auto "
+                         "(auto prunes whenever the scan streams)")
+    ap.add_argument("--scan-block", type=int, default=None,
+                    help="streaming scan chunk (None routes by catalog "
+                         "size; set e.g. 128 to stream the small demo "
+                         "catalog so pruning engages)")
     args = ap.parse_args()
     if args.pipeline:
         args.mode = "pipelined"
@@ -55,9 +69,11 @@ def main():
     params, cfg = train(data, args.steps)
     freqs = np.bincount(data.histories[data.histories >= 0],
                         minlength=data.n_items)
+    prune = {"on": True, "off": False, "auto": None}[args.prune]
     engine = RecSysEngine.build(params, cfg, radius=112, n_candidates=50,
                                 top_k=10, hot_rows=args.hot_rows,
-                                item_freqs=freqs)
+                                item_freqs=freqs, prune=prune,
+                                scan_block=args.scan_block)
     knobs = ({} if args.mode == "sync" else {"depth": args.depth})
     batcher = make_server(engine, args.mode, max_batch=args.batch, **knobs)
     if args.mode != "sync":
@@ -93,9 +109,22 @@ def main():
     print(f"\nserved {len(served)} queries in {dt:.2f}s "
           f"({len(served) / dt:.0f} qps measured on THIS CPU — software path)")
     stats = batcher.stats()
+    # blocks-touched sample: one filter-stage batch through the engine
+    # directly (the front-ends consume the NNSResult before returning)
+    sample = [make_query(i) for i in idx[: min(8, len(idx))]]
+    batch = {k: np.stack([q[k] for q in sample]) for k in sample[0]}
+    nns = engine.filter_stage(batch)
+    if nns.blocks_touched is not None:
+        nb = engine.block_summary.n_blocks
+        bt = np.asarray(nns.blocks_touched)
+        prune_note = (f"blocks touched {bt.mean():.1f}/{nb} per query "
+                      f"(scan_frac {bt.mean() / nb:.3f})")
+    else:
+        prune_note = "pruning inactive (dense plan or --prune off)"
     print(f"micro-batches: {stats['n_batches']}, "
           f"padding fraction {stats['padding_fraction']:.3f}, "
-          f"hot-cache hit rate {stats['cache_hit_rate']:.3f}")
+          f"hot-cache hit rate {stats['cache_hit_rate']:.3f}, "
+          f"{prune_note}")
     batcher.close()
     e2e = cm.end_to_end_movielens(n_candidates=50)
     print(f"iMARS fabric model: {e2e['imars_qps']:.0f} qps/query-engine, "

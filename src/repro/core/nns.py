@@ -44,11 +44,12 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
 from repro.kernels.streaming_nns import BIG_DIST
-from repro.utils import shard_map
+from repro.utils import cdiv, pytree_dataclass, shard_map
 
 # invalid-slot distance sentinel (single definition in
 # kernels/streaming_nns.py), exported for tests
@@ -59,12 +60,227 @@ _BIG = BIG  # backwards-compatible alias
 # scan wins by default (a 256-query batch at 2**18 items is already 256 MiB)
 STREAM_MIN_ITEMS = 1 << 18
 DEFAULT_SCAN_BLOCK = 4096
+# default BlockSummary granularity: one summary entry per 4096 rows (the
+# default streaming chunk). Must stay a multiple of 128 so every viable
+# Pallas tile divides it (see `build_block_summary`).
+SUMMARY_BLOCK_ROWS = 4096
 
 
 class NNSResult(NamedTuple):
     indices: jax.Array  # (q, max_candidates) int32, -1 padded
     distances: jax.Array  # (q, max_candidates) int32, BIG where invalid
     counts: jax.Array  # (q,) int32 — total matches within radius
+    # (q,) int32 — summary blocks whose lower bound admitted the query, or
+    # None when the scan ran unpruned (dense plan, no summary, prune=False)
+    blocks_touched: jax.Array | None = None
+
+
+# ---------------------------------------------------------------------------
+# Block summaries: sound per-block Hamming lower bounds for scan pruning
+# ---------------------------------------------------------------------------
+def _popcount_u32(x: np.ndarray) -> np.ndarray:
+    """Vectorized host-side popcount over uint32 arrays -> int32 counts."""
+    x = x.astype(np.uint32)
+    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2))
+                                       & np.uint32(0x33333333))
+    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> np.uint32(24)).astype(np.int32)
+
+
+@pytree_dataclass(meta_fields=("block_rows",))
+class BlockSummary:
+    """Per-block occupancy summary of a packed-signature DB, for pruning.
+
+    For each block of `block_rows` consecutive DB rows it keeps, over the
+    block's *eligible* rows (alive under the tombstone mask and below
+    `n_valid`):
+
+      * ``or_sigs`` / ``and_sigs`` — the bitwise OR / AND of the rows'
+        packed signatures: any eligible row r satisfies
+        ``and_sigs <= r <= or_sigs`` as bit sets;
+      * ``min_pc`` / ``max_pc`` — per-word popcount range of the rows;
+      * ``n_alive`` — eligible-row count (0 = the block can never match).
+
+    `summary_block_bounds` turns these into a sound lower bound on the
+    Hamming distance from any query to any eligible row of the block, so
+    blocks whose bound exceeds the radius are skipped without changing a
+    single output bit (see docs/KERNELS.md for the soundness argument).
+
+    Soundness contract: the eligible-row set the summary was built over
+    must be a SUPERSET of the rows the scan may match — then every pruned
+    block is provably empty of matches. Equality keeps bounds tight;
+    `update_block_summary` recomputes touched blocks exactly so tombstoned
+    rows never loosen (or unsound-tighten) the bound.
+    """
+
+    or_sigs: jax.Array  # (n_blocks, words) uint32 — OR of eligible rows
+    and_sigs: jax.Array  # (n_blocks, words) uint32 — AND of eligible rows
+    min_pc: jax.Array  # (n_blocks, words) int32 — min per-word popcount
+    max_pc: jax.Array  # (n_blocks, words) int32 — max per-word popcount
+    n_alive: jax.Array  # (n_blocks,) int32 — eligible rows in the block
+    block_rows: int = SUMMARY_BLOCK_ROWS
+
+    @property
+    def n_blocks(self) -> int:
+        return self.or_sigs.shape[0]
+
+
+# host-side builder passes this many blocks per vectorized sweep, bounding
+# peak temp memory (64 blocks * 4096 rows * 8 words ~= 8 MiB per temporary)
+_BUILD_CHUNK_BLOCKS = 64
+
+
+def _summarize_blocks(sigs3: np.ndarray, elig3: np.ndarray):
+    """(nb, block_rows, words) sigs + (nb, block_rows) eligibility ->
+    the five per-block summary arrays (numpy)."""
+    e = elig3[..., None]
+    or_sigs = np.bitwise_or.reduce(
+        np.where(e, sigs3, np.uint32(0)), axis=1).astype(np.uint32)
+    and_sigs = np.bitwise_and.reduce(
+        np.where(e, sigs3, np.uint32(0xFFFFFFFF)), axis=1).astype(np.uint32)
+    pc = _popcount_u32(sigs3)
+    min_pc = np.min(np.where(e, pc, np.int32(33)), axis=1).astype(np.int32)
+    max_pc = np.max(np.where(e, pc, np.int32(-1)), axis=1).astype(np.int32)
+    n_alive = elig3.sum(axis=1).astype(np.int32)
+    return or_sigs, and_sigs, min_pc, max_pc, n_alive
+
+
+def build_block_summary(
+    db_sigs,  # (n, words) uint32 — packed signatures (numpy or jax)
+    block_rows: int = SUMMARY_BLOCK_ROWS,
+    *,
+    db_mask=None,  # (n,) bool — rows eligible to match (tombstone mask)
+    n_valid: int | None = None,  # rows >= n_valid are padding, ineligible
+) -> BlockSummary:
+    """Build a `BlockSummary` over `db_sigs` (pure, host-side).
+
+    The eligibility set is ``db_mask AND (row < n_valid)`` — pass exactly
+    what the scan will use so bounds stay tight; passing a superset is
+    sound but looser. `block_rows` must be a positive multiple of 128 so
+    any lane-aligned Pallas tile divides it (mask expansion stays a pure
+    repeat). Runs in bounded chunks of blocks, so peak temporary memory is
+    independent of the DB size.
+    """
+    block_rows = int(block_rows)
+    if block_rows <= 0 or block_rows % 128:
+        raise ValueError(
+            f"block_rows must be a positive multiple of 128, got "
+            f"{block_rows}")
+    sigs = np.asarray(db_sigs)
+    n, words = sigs.shape
+    nb = max(1, cdiv(n, block_rows))
+    elig = (np.ones(n, bool) if db_mask is None
+            else np.asarray(db_mask, bool)[:n].copy())
+    if n_valid is not None:
+        elig &= np.arange(n) < int(n_valid)
+
+    or_sigs = np.zeros((nb, words), np.uint32)
+    and_sigs = np.full((nb, words), np.uint32(0xFFFFFFFF), np.uint32)
+    min_pc = np.full((nb, words), 33, np.int32)
+    max_pc = np.full((nb, words), -1, np.int32)
+    n_alive = np.zeros((nb,), np.int32)
+    for b0 in range(0, nb, _BUILD_CHUNK_BLOCKS):
+        b1 = min(b0 + _BUILD_CHUNK_BLOCKS, nb)
+        lo, hi = b0 * block_rows, min(b1 * block_rows, n)
+        rows = (b1 - b0) * block_rows
+        s = np.zeros((rows, words), np.uint32)
+        e = np.zeros((rows,), bool)
+        s[: hi - lo] = sigs[lo:hi]
+        e[: hi - lo] = elig[lo:hi]
+        (or_sigs[b0:b1], and_sigs[b0:b1], min_pc[b0:b1], max_pc[b0:b1],
+         n_alive[b0:b1]) = _summarize_blocks(
+            s.reshape(b1 - b0, block_rows, words),
+            e.reshape(b1 - b0, block_rows))
+    return BlockSummary(
+        or_sigs=jnp.asarray(or_sigs), and_sigs=jnp.asarray(and_sigs),
+        min_pc=jnp.asarray(min_pc), max_pc=jnp.asarray(max_pc),
+        n_alive=jnp.asarray(n_alive), block_rows=block_rows)
+
+
+def update_block_summary(summary: BlockSummary, db_sigs, db_mask,
+                         touched_rows) -> BlockSummary:
+    """Incrementally refresh a summary after rows changed eligibility.
+
+    Recomputes — exactly, from `db_sigs`/`db_mask` — every block containing
+    a row in `touched_rows` (host-side; cost is O(touched blocks), not
+    O(n)). This is the upsert/delete maintenance rule: tombstoning a row
+    must *tighten* (never loosen) the block's bound, and an incremental
+    OR/AND cannot un-set bits, so touched blocks are rebuilt from scratch.
+    The result is bit-identical to `build_block_summary` over the same
+    (db_sigs, db_mask) — asserted by tests and benchmarks/catalog_churn.py.
+    """
+    rows = np.unique(np.asarray(touched_rows, np.int64).reshape(-1))
+    sigs = np.asarray(db_sigs)
+    n, words = sigs.shape
+    br = summary.block_rows
+    rows = rows[(rows >= 0) & (rows < n)]
+    if rows.size == 0:
+        return summary
+    elig = (np.ones(n, bool) if db_mask is None
+            else np.asarray(db_mask, bool)[:n])
+    blocks = np.unique(rows // br)
+    blocks = blocks[blocks < summary.n_blocks]
+    or_sigs = np.asarray(summary.or_sigs).copy()
+    and_sigs = np.asarray(summary.and_sigs).copy()
+    min_pc = np.asarray(summary.min_pc).copy()
+    max_pc = np.asarray(summary.max_pc).copy()
+    n_alive = np.asarray(summary.n_alive).copy()
+    for b in blocks:
+        lo, hi = int(b) * br, min(int(b) * br + br, n)
+        s = np.zeros((br, words), np.uint32)
+        e = np.zeros((br,), bool)
+        s[: hi - lo] = sigs[lo:hi]
+        e[: hi - lo] = elig[lo:hi]
+        (or_sigs[b], and_sigs[b], min_pc[b], max_pc[b],
+         n_alive[b]) = (a[0] for a in _summarize_blocks(
+            s[None], e[None]))
+    return BlockSummary(
+        or_sigs=jnp.asarray(or_sigs), and_sigs=jnp.asarray(and_sigs),
+        min_pc=jnp.asarray(min_pc), max_pc=jnp.asarray(max_pc),
+        n_alive=jnp.asarray(n_alive), block_rows=br)
+
+
+def summary_block_bounds(query_sigs: jax.Array,
+                         summary: BlockSummary) -> jax.Array:
+    """(q, words) queries x summary -> (q, n_blocks) int32 lower bounds.
+
+    For every (query, block) pair, a sound lower bound on the Hamming
+    distance from the query to ANY eligible row of the block, combining
+    two per-word bounds (the larger of the two per word, summed):
+
+      * occupancy:  popcount(q & ~or) + popcount(~q & and) — bit positions
+        where the query is 1 but no eligible row is (q & ~or), or where the
+        query is 0 but every eligible row is 1 (~q & and), each contribute
+        one mismatch to every row of the block;
+      * popcount range: |popcount(q_w) - popcount(r_w)| <= d(q_w, r_w),
+        and popcount(r_w) is within [min_pc, max_pc].
+
+    Blocks with no eligible rows bound to `BIG` (always pruned).
+    """
+    pc = lambda x: jax.lax.population_count(x).astype(jnp.int32)  # noqa: E731
+    q = query_sigs[:, None, :]  # (q, 1, words)
+    occ = pc(q & ~summary.or_sigs[None]) + pc(~q & summary.and_sigs[None])
+    pcq = pc(q)
+    rng = jnp.maximum(pcq - summary.max_pc[None],
+                      summary.min_pc[None] - pcq)
+    per_word = jnp.maximum(occ, jnp.maximum(rng, 0))
+    total = jnp.sum(per_word, axis=-1)
+    return jnp.where(summary.n_alive[None] > 0, total, BIG)
+
+
+def _prune_mask(query_sigs, summary, radius):
+    """-> (prune (q, n_blocks) bool, blocks_touched (q,) int32)."""
+    prune = summary_block_bounds(query_sigs, summary) > radius
+    touched = jnp.sum((~prune).astype(jnp.int32), axis=-1)
+    return prune, touched
+
+
+def _plan_streams(n_rows: int, scan_block: int | None) -> bool:
+    """Static mirror of `fixed_radius_nns`'s dense-vs-streaming routing."""
+    if scan_block is None:
+        return n_rows >= STREAM_MIN_ITEMS
+    return scan_block != 0
 
 
 def fixed_radius_nns(
@@ -77,6 +293,8 @@ def fixed_radius_nns(
     scan_block: int | None = None,  # None=auto, 0=dense, >0=streaming chunk
     n_valid: jax.Array | int | None = None,  # rows >= n_valid never match
     superblock: int | None = None,  # streaming superblock rows (testing knob)
+    summary: BlockSummary | None = None,  # block summary enabling pruning
+    prune: bool | None = None,  # None=auto (prune when summary given), False=off
 ) -> NNSResult:
     """All db items within Hamming `radius` of each query (bounded, sorted).
 
@@ -94,29 +312,36 @@ def fixed_radius_nns(
         (may be a traced scalar — used by the sharded paths for padding).
       superblock: streaming superblock size override (testing knob;
         results are superblock-invariant).
+      summary: optional `BlockSummary` over `db_sigs` (built against an
+        eligibility superset of this scan's (db_mask, n_valid)); enables
+        block pruning on the streaming plan. Bit-identical results — the
+        bound is sound — plus a per-query `blocks_touched` counter.
+      prune: None (default) prunes whenever `summary` is given and the
+        plan streams; False disables pruning even with a summary.
     Returns:
       NNSResult of (q, K) indices (-1 padded), (q, K) distances (`BIG`
-      where invalid), and (q,) total within-radius counts. Candidates are
-      sorted by (distance, index) ascending — the exact dense
-      threshold + top-k order, whatever the execution plan.
+      where invalid), (q,) total within-radius counts, and (pruned scans
+      only) (q,) `blocks_touched`. Candidates are sorted by
+      (distance, index) ascending — the exact dense threshold + top-k
+      order, whatever the execution plan.
     """
     n, words = db_sigs.shape
-    if scan_block is None:
-        # beyond-capacity DBs stream as multiple superblocks, so size alone
-        # never forces the dense path (and tombstone masks stream too)
-        use_stream = n >= STREAM_MIN_ITEMS
-        block = DEFAULT_SCAN_BLOCK
-    elif scan_block == 0:
-        use_stream = False
-    else:
-        use_stream, block = True, scan_block
+    use_stream = _plan_streams(n, scan_block)
+    block = DEFAULT_SCAN_BLOCK if not scan_block else scan_block
 
     if use_stream:
+        prune_blocks = blocks_touched = block_rows = None
+        if summary is not None and prune is not False:
+            prune_blocks, blocks_touched = _prune_mask(
+                query_sigs, summary, radius)
+            block_rows = summary.block_rows
         indices, distances, counts = ops.streaming_nns(
             query_sigs, db_sigs, radius=radius,
             max_candidates=max_candidates, scan_block=block, n_valid=n_valid,
-            superblock=superblock, db_mask=db_mask)
-        return NNSResult(indices=indices, distances=distances, counts=counts)
+            superblock=superblock, db_mask=db_mask,
+            prune_blocks=prune_blocks, prune_block_rows=block_rows)
+        return NNSResult(indices=indices, distances=distances, counts=counts,
+                         blocks_touched=blocks_touched)
 
     d = ops.hamming_distances(query_sigs, db_sigs)  # (q, n)
     within = d <= radius
@@ -145,7 +370,8 @@ def fixed_radius_nns(
 # never retrace in the caller
 _fixed_radius_nns_jit = jax.jit(
     fixed_radius_nns,
-    static_argnames=("radius", "max_candidates", "scan_block", "superblock"))
+    static_argnames=("radius", "max_candidates", "scan_block", "superblock",
+                     "prune"))
 
 
 def fixed_radius_nns_async(
@@ -158,6 +384,8 @@ def fixed_radius_nns_async(
     scan_block: int | None = None,
     n_valid: jax.Array | int | None = None,
     superblock: int | None = None,
+    summary: BlockSummary | None = None,
+    prune: bool | None = None,
 ) -> NNSResult:
     """Non-blocking filtering scan: dispatch and return device futures.
 
@@ -173,7 +401,7 @@ def fixed_radius_nns_async(
     return _fixed_radius_nns_jit(
         query_sigs, db_sigs, radius=radius, max_candidates=max_candidates,
         db_mask=db_mask, scan_block=scan_block, n_valid=n_valid,
-        superblock=superblock)
+        superblock=superblock, summary=summary, prune=prune)
 
 
 def _pad_queries_to_axis(mesh, query_axis, query_sigs):
@@ -193,8 +421,9 @@ def _slice_query_pad(res: NNSResult, pad: int) -> NNSResult:
     if not pad:
         return res
     q = res.counts.shape[0] - pad
+    bt = None if res.blocks_touched is None else res.blocks_touched[:q]
     return NNSResult(indices=res.indices[:q], distances=res.distances[:q],
-                     counts=res.counts[:q])
+                     counts=res.counts[:q], blocks_touched=bt)
 
 
 def sharded_fixed_radius_nns(
@@ -210,6 +439,8 @@ def sharded_fixed_radius_nns(
     query_axis: str | None = None,  # also shard queries over this mesh axis
     superblock: int | None = None,  # forwarded to the streaming scan
     db_mask: jax.Array | None = None,  # (n,) bool, row-sharded like db_sigs
+    summary: BlockSummary | None = None,  # block summary over the padded DB
+    prune: bool | None = None,  # None=auto, False=off
 ):
     """Fixed-radius NNS with the item DB sharded across the mesh.
 
@@ -228,6 +459,12 @@ def sharded_fixed_radius_nns(
     candidate gather stays confined to the bank axis, composing both
     partitions. Queries are padded to a multiple of the query-axis size and
     the pad rows sliced off the result.
+
+    `summary` (a `BlockSummary` over the padded DB) enables block pruning
+    inside each bank when the per-shard scan streams AND the shard size is
+    a multiple of `summary.block_rows` (so each bank owns whole summary
+    blocks); otherwise it is silently ignored (unpruned scan, no error).
+    Per-bank `blocks_touched` counters psum into global per-query counts.
     """
     n = db_sigs.shape[0]
     n_shards = mesh.shape[axis]
@@ -238,14 +475,25 @@ def sharded_fixed_radius_nns(
     if query_axis is not None:
         query_sigs, q_pad = _pad_queries_to_axis(mesh, query_axis,
                                                  query_sigs)
+    use_prune = (
+        summary is not None and prune is not False
+        and _plan_streams(per_shard, scan_block)
+        and per_shard % summary.block_rows == 0
+        and summary.n_blocks * summary.block_rows == n)
 
-    def local_scan(q_local, db_local, mask_local=None):
+    def local_scan(q_local, db_local, *rest):
+        rest = list(rest)
+        mask_local = rest.pop(0) if db_mask is not None else None
+        sum_local = (BlockSummary(*rest, block_rows=summary.block_rows)
+                     if use_prune else None)
         shard = jax.lax.axis_index(axis)
         # prefix count of real (non-padding) rows within this shard
         local_valid = jnp.clip(n_valid - shard * per_shard, 0, per_shard)
         res = fixed_radius_nns(q_local, db_local, radius, local_k,
                                scan_block=scan_block, n_valid=local_valid,
-                               superblock=superblock, db_mask=mask_local)
+                               superblock=superblock, db_mask=mask_local,
+                               summary=sum_local,
+                               prune=True if use_prune else False)
         gidx = jnp.where(
             res.indices >= 0, res.indices + shard * per_shard, -1
         )
@@ -253,6 +501,8 @@ def sharded_fixed_radius_nns(
         all_idx = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
         all_dist = jax.lax.all_gather(res.distances, axis, axis=1, tiled=True)
         counts = jax.lax.psum(res.counts, axis)
+        blocks_touched = (jax.lax.psum(res.blocks_touched, axis)
+                          if use_prune else None)
         # tiny shards can gather fewer slots than max_candidates: select
         # what exists, pad the rest with (-1, BIG)
         k = min(max_candidates, all_dist.shape[-1])
@@ -265,7 +515,8 @@ def sharded_fixed_radius_nns(
             idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
             dist = jnp.pad(dist, ((0, 0), (0, pad)),
                            constant_values=int(BIG))
-        return NNSResult(indices=idx, distances=dist, counts=counts)
+        return NNSResult(indices=idx, distances=dist, counts=counts,
+                         blocks_touched=blocks_touched)
 
     q_spec = P(query_axis)  # P(None) == replicated when query_axis is None
     specs_in = (q_spec, P(axis, None))
@@ -277,7 +528,16 @@ def sharded_fixed_radius_nns(
                 f"!= {n}")
         specs_in = (*specs_in, P(axis))
         args = (*args, db_mask)
-    specs_out = NNSResult(indices=q_spec, distances=q_spec, counts=q_spec)
+    if use_prune:
+        # summary arrays row-shard with the DB: each bank sees the summary
+        # blocks covering exactly its rows (per_shard % block_rows == 0)
+        specs_in = (*specs_in, P(axis, None), P(axis, None), P(axis, None),
+                    P(axis, None), P(axis))
+        args = (*args, summary.or_sigs, summary.and_sigs, summary.min_pc,
+                summary.max_pc, summary.n_alive)
+    specs_out = NNSResult(
+        indices=q_spec, distances=q_spec, counts=q_spec,
+        blocks_touched=q_spec if use_prune else None)
     fn = shard_map(
         local_scan, mesh=mesh, in_specs=specs_in, out_specs=specs_out,
         check_vma=False,
@@ -297,6 +557,8 @@ def query_parallel_nns(
     n_valid: jax.Array | int | None = None,
     superblock: int | None = None,
     db_mask: jax.Array | None = None,  # (n,) bool, replicated like db_sigs
+    summary: BlockSummary | None = None,  # replicated with the catalog
+    prune: bool | None = None,  # None=auto, False=off
 ):
     """Fixed-radius NNS with the QUERY batch sharded over `mesh[query_axis]`.
 
@@ -305,16 +567,25 @@ def query_parallel_nns(
     candidate gather at all, so it parallelizes the streaming scan across
     host/device cores at zero communication cost. Queries are padded to a
     multiple of the axis size; pad rows are sliced off the result.
-    `db_mask` tombstones rows and replicates with the catalog.
+    `db_mask` tombstones rows and replicates with the catalog; `summary`
+    (replicated too) enables block pruning when the scan streams.
     """
     padded, pad = _pad_queries_to_axis(mesh, query_axis, query_sigs)
     nv = jnp.asarray(
         db_sigs.shape[0] if n_valid is None else n_valid, jnp.int32)
+    use_prune = (summary is not None and prune is not False
+                 and _plan_streams(db_sigs.shape[0], scan_block))
 
-    def local_scan(q_local, db_local, nv_local, mask_local=None):
+    def local_scan(q_local, db_local, nv_local, *rest):
+        rest = list(rest)
+        mask_local = rest.pop(0) if db_mask is not None else None
+        sum_local = (BlockSummary(*rest, block_rows=summary.block_rows)
+                     if use_prune else None)
         return fixed_radius_nns(q_local, db_local, radius, max_candidates,
                                 scan_block=scan_block, n_valid=nv_local,
-                                superblock=superblock, db_mask=mask_local)
+                                superblock=superblock, db_mask=mask_local,
+                                summary=sum_local,
+                                prune=True if use_prune else False)
 
     q_spec = P(query_axis)
     specs_in = (q_spec, P(), P())
@@ -322,9 +593,14 @@ def query_parallel_nns(
     if db_mask is not None:
         specs_in = (*specs_in, P())
         args = (*args, db_mask)
+    if use_prune:
+        specs_in = (*specs_in, P(), P(), P(), P(), P())
+        args = (*args, summary.or_sigs, summary.and_sigs, summary.min_pc,
+                summary.max_pc, summary.n_alive)
     fn = shard_map(
         local_scan, mesh=mesh, in_specs=specs_in,
-        out_specs=NNSResult(indices=q_spec, distances=q_spec, counts=q_spec),
+        out_specs=NNSResult(indices=q_spec, distances=q_spec, counts=q_spec,
+                            blocks_touched=q_spec if use_prune else None),
         check_vma=False,
     )
     return _slice_query_pad(fn(*args), pad)
@@ -395,8 +671,11 @@ def merge_delta_candidates(base: NNSResult, delta: NNSResult,
     ids = jnp.take_along_axis(ids, order, axis=1)
     dist = jnp.take_along_axis(dist, order, axis=1)
     idx, d = merge_candidate_buffers(ids, dist, max_candidates)
+    # the bounded delta scans dense (never pruned): the merged result
+    # carries the base scan's blocks_touched counter through unchanged
     return NNSResult(indices=idx, distances=d,
-                     counts=base.counts + delta.counts)
+                     counts=base.counts + delta.counts,
+                     blocks_touched=base.blocks_touched)
 
 
 def delta_aware_nns(
@@ -411,19 +690,23 @@ def delta_aware_nns(
     scan_block: int | None = None,
     n_valid: jax.Array | int | None = None,
     superblock: int | None = None,
+    summary: BlockSummary | None = None,  # block summary over the base
+    prune: bool | None = None,
 ) -> NNSResult:
     """Fixed-radius NNS over (read-only base) + (bounded delta shard).
 
     The base scans with its usual execution plan (dense / streaming /
-    superblocked, with tombstoned rows masked), the delta scans dense, and
-    one `merge_candidate_buffers` reuse fuses the two bounded buffers —
-    results bit-match `fixed_radius_nns` over a from-scratch rebuilt table
-    (delta rows folded in, tombstones dropped). This is the serving entry
-    the live-catalog engine routes through while updates are pending.
+    superblocked, with tombstoned rows masked, optionally block-pruned via
+    `summary`), the delta scans dense, and one `merge_candidate_buffers`
+    reuse fuses the two bounded buffers — results bit-match
+    `fixed_radius_nns` over a from-scratch rebuilt table (delta rows folded
+    in, tombstones dropped). This is the serving entry the live-catalog
+    engine routes through while updates are pending.
     """
     base = fixed_radius_nns(query_sigs, db_sigs, radius, max_candidates,
                             db_mask=db_mask, scan_block=scan_block,
-                            n_valid=n_valid, superblock=superblock)
+                            n_valid=n_valid, superblock=superblock,
+                            summary=summary, prune=prune)
     delta = delta_scan(query_sigs, delta_sigs, delta_ids, radius,
                        max_candidates)
     return merge_delta_candidates(base, delta, max_candidates)

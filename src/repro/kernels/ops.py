@@ -118,10 +118,12 @@ def _flash_attention_pallas(q, k, v, *, causal=True, scale=None, interpret):
 
 
 def _streaming_nns_ref(queries, db, *, radius, max_candidates, scan_block,
-                       n_valid, superblock=None, db_mask=None):
+                       n_valid, superblock=None, db_mask=None,
+                       prune_blocks=None, prune_block_rows=None):
     return ref.streaming_nns_ref(
         queries, db, radius, max_candidates, scan_block=scan_block,
-        n_valid=n_valid, superblock=superblock, db_mask=db_mask)
+        n_valid=n_valid, superblock=superblock, db_mask=db_mask,
+        prune_blocks=prune_blocks, prune_block_rows=prune_block_rows)
 
 
 # the kernel's rank-select merge materializes an (block_q, m, m) compare with
@@ -134,7 +136,9 @@ _STREAM_PALLAS_MAX_BLOCK_N = 512
 
 
 def _streaming_nns_pallas(queries, db, *, radius, max_candidates, scan_block,
-                          n_valid, superblock=None, db_mask=None, interpret):
+                          n_valid, superblock=None, db_mask=None,
+                          prune_blocks=None, prune_block_rows=None,
+                          interpret):
     limit = db.shape[0] if n_valid is None else n_valid
     block_n = min(max(128, round_up(scan_block, 128)),
                   _STREAM_PALLAS_MAX_BLOCK_N)
@@ -145,10 +149,17 @@ def _streaming_nns_pallas(queries, db, *, radius, max_candidates, scan_block,
         # output-invariant exactly like the scan_block -> block_n remap)
         superblock = max(128, round_up(superblock, 128))
         block_n = math.gcd(block_n, superblock)
+    if prune_blocks is not None:
+        # summary blocks must cover whole kernel tiles so the per-cell prune
+        # mask expands by pure repetition; block_rows is a multiple of 128
+        # by construction (core.nns.build_block_summary), so the gcd stays
+        # lane-aligned and the remap stays output-invariant
+        block_n = math.gcd(block_n, int(prune_block_rows))
     return streaming_nns_pallas(
         queries, db, jnp.asarray(limit, jnp.int32), db_mask, radius=radius,
         max_candidates=max_candidates, block_n=block_n,
-        superblock=superblock, interpret=interpret)
+        superblock=superblock, prune_blocks=prune_blocks,
+        prune_block_rows=prune_block_rows, interpret=interpret)
 
 
 register_kernel("hamming_distances", ref=ref.hamming_distance_ref,
@@ -178,7 +189,7 @@ def hamming_distances(queries, db):
 
 def streaming_nns(queries, db, *, radius, max_candidates,
                   scan_block=4096, n_valid=None, superblock=None,
-                  db_mask=None):
+                  db_mask=None, prune_blocks=None, prune_block_rows=None):
     """Streaming fixed-radius NNS over the full DB, O(q*max_candidates) mem.
 
     Returns (indices, distances, counts) bit-matching the dense
@@ -190,10 +201,19 @@ def streaming_nns(queries, db, *, radius, max_candidates,
     results are superblock-invariant). `db_mask` ((n,) bool, optional)
     marks per-row eligibility — the tombstone mask of the live-catalog
     layer; False rows never match and never count.
+
+    `prune_blocks` ((q, nb) bool, True = skip) + `prune_block_rows` (rows
+    per summary block, a multiple of 128) carry the core `BlockSummary`
+    pruning decision: both backends skip chunks/blocks every query prunes
+    (lax.cond in the ref, pl.when predication in the kernel). The caller
+    (core.nns.fixed_radius_nns) guarantees the mask is sound, so outputs
+    stay bit-identical to the unpruned scan on either backend.
     """
     return dispatch("streaming_nns", queries, db, radius=radius,
                     max_candidates=max_candidates, scan_block=scan_block,
-                    n_valid=n_valid, superblock=superblock, db_mask=db_mask)
+                    n_valid=n_valid, superblock=superblock, db_mask=db_mask,
+                    prune_blocks=prune_blocks,
+                    prune_block_rows=prune_block_rows)
 
 
 def int8_matmul(x, w, x_scale, w_scale):

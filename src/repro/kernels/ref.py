@@ -64,6 +64,8 @@ def streaming_nns_ref(
     n_valid: jax.Array | int | None = None,
     superblock: int | None = None,  # rows per superblock (testing override)
     db_mask: jax.Array | None = None,  # (n,) bool — 0/False rows never match
+    prune_blocks: jax.Array | None = None,  # (q, nb) bool — True = skip block
+    prune_block_rows: int | None = None,  # rows per summary block
 ):
     """`lax.scan`-chunked streaming NNS oracle, O(q * max_candidates) memory.
 
@@ -82,6 +84,14 @@ def streaming_nns_ref(
     cap remains beyond int32 indexing. `db_mask` mirrors the kernel's
     optional row-eligibility operand (live-catalog tombstones): masked
     rows never match and never count.
+
+    `prune_blocks` ((q, nb) bool, `prune_block_rows` rows per summary
+    block) mirrors the kernel's block-pruning cells (core.nns
+    `BlockSummary` bounds): a scan chunk whose rows are all inside blocks
+    pruned for EVERY query is skipped via `lax.cond` — zero distance work —
+    which cannot change outputs because the bound is sound (pruned blocks
+    hold no within-radius rows for any query). Rows beyond the summary's
+    coverage are always scanned.
     """
     q, words = queries.shape
     n = db.shape[0]
@@ -91,7 +101,21 @@ def streaming_nns_ref(
     limit = jnp.minimum(
         jnp.asarray(n if n_valid is None else n_valid, jnp.int32), n)
 
-    def scan_superblock(db_s, limit_s, mask_s):
+    row_needed = None
+    if prune_blocks is not None:
+        # per-row "some query still needs this row": expand the per-block
+        # mask (ORed over queries) by block_rows, pad uncovered tail rows
+        # with True (a stale/short summary is sound, never wrong)
+        needed_b = jnp.any(jnp.logical_not(prune_blocks), axis=0)  # (nb,)
+        cover = needed_b.shape[0] * int(prune_block_rows)
+        row_needed = jnp.repeat(needed_b, int(prune_block_rows))
+        if cover < n:
+            row_needed = jnp.concatenate(
+                [row_needed, jnp.ones((n - cover,), jnp.bool_)])
+        else:
+            row_needed = row_needed[:n]
+
+    def scan_superblock(db_s, limit_s, mask_s, needed_s):
         """One packed-key lax.scan over <= sb_rows rows -> ((q, K), (q,))."""
         n_s = db_s.shape[0]
         # chunks never need to exceed the superblock: an oversized
@@ -108,9 +132,7 @@ def streaming_nns_ref(
             mask_p = jnp.pad(mask_s, (0, pad)) if pad else mask_s
             mask_blocks = mask_p.reshape(n_blocks, block).astype(jnp.bool_)
 
-        def step(carry, blk):
-            keys, counts = carry
-            db_blk, mask_blk, j = blk
+        def scan_chunk(keys, counts, db_blk, mask_blk, j):
             d = hamming_distance_ref(queries, db_blk)  # (q, block)
             lidx = j * block + jnp.arange(block, dtype=jnp.int32)
             within = jnp.logical_and(d <= radius, (lidx < limit_s)[None, :])
@@ -120,13 +142,35 @@ def streaming_nns_ref(
                 within, pack_key(d, lidx[None, :], words), big)
             merged = jnp.concatenate([keys, new_keys], axis=1)
             neg_top, _ = jax.lax.top_k(-merged, max_candidates)
-            return (-neg_top, counts), None
+            return -neg_top, counts
+
+        if needed_s is None:
+            def step(carry, blk):
+                db_blk, mask_blk, j = blk
+                return scan_chunk(*carry, db_blk, mask_blk, j), None
+
+            xs = (blocks, mask_blocks,
+                  jnp.arange(n_blocks, dtype=jnp.int32))
+        else:
+            needed_p = (jnp.pad(needed_s, (0, pad)) if pad else needed_s)
+            chunk_needed = jnp.any(
+                needed_p.reshape(n_blocks, block), axis=1)
+
+            def step(carry, blk):
+                db_blk, mask_blk, needed, j = blk
+                # pruned chunk: the sound bound guarantees zero matches
+                # here, so skipping is a pure execution shortcut
+                return jax.lax.cond(
+                    needed,
+                    lambda c: scan_chunk(*c, db_blk, mask_blk, j),
+                    lambda c: c, carry), None
+
+            xs = (blocks, mask_blocks, chunk_needed,
+                  jnp.arange(n_blocks, dtype=jnp.int32))
 
         keys0 = jnp.full((q, max_candidates), big, jnp.int32)
         counts0 = jnp.zeros((q,), jnp.int32)
-        (keys, counts), _ = jax.lax.scan(
-            step, (keys0, counts0),
-            (blocks, mask_blocks, jnp.arange(n_blocks, dtype=jnp.int32)))
+        (keys, counts), _ = jax.lax.scan(step, (keys0, counts0), xs)
         return keys, counts
 
     all_idx, all_dist = [], []
@@ -135,7 +179,8 @@ def streaming_nns_ref(
         db_s = db[off:off + sb_rows]
         keys, cnt = scan_superblock(
             db_s, jnp.clip(limit - off, 0, db_s.shape[0]),
-            None if db_mask is None else db_mask[off:off + sb_rows])
+            None if db_mask is None else db_mask[off:off + sb_rows],
+            None if row_needed is None else row_needed[off:off + sb_rows])
         dist, local = unpack_key(keys, words)
         valid = keys < big
         all_idx.append(jnp.where(valid, local + off, -1))

@@ -142,9 +142,12 @@ def merge_candidate_buffers(indices: jax.Array, distances: jax.Array,
 
 def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
                           *, radius, shift, big, blocks_per_sb,
-                          mask_ref=None):
+                          mask_ref=None, scan_ref=None):
     j = pl.program_id(1)
 
+    # buffer inits stay OUTSIDE the prune predicate: a superblock whose
+    # every block is pruned for this query tile must still emit the empty
+    # (all-sentinel) buffer and zero counts, not garbage
     @pl.when(j % blocks_per_sb == 0)
     def _init_keys():  # fresh candidate buffer per superblock
         keys_ref[...] = jnp.full(keys_ref.shape, big, jnp.int32)
@@ -153,35 +156,44 @@ def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
     def _init_counts():
         counts_ref[...] = jnp.zeros(counts_ref.shape, jnp.int32)
 
-    q = q_ref[...]  # (block_q, words) uint32
-    db = db_ref[...]  # (block_n, words) uint32
-    block_n = db.shape[0]
-    x = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
-    d = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
-    iota = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
-    gidx = j * block_n + iota  # global row id (int32-safe up to 2**31 rows)
-    within = jnp.logical_and(d <= radius, gidx < limit_ref[0, 0])
-    if mask_ref is not None:  # tombstoned rows never match (matchline AND)
-        within = jnp.logical_and(within, (mask_ref[...] != 0)[0][None, :])
-    counts_ref[...] += jnp.sum(within.astype(jnp.int32), axis=1, keepdims=True)
+    def _scan_block():
+        q = q_ref[...]  # (block_q, words) uint32
+        db = db_ref[...]  # (block_n, words) uint32
+        block_n = db.shape[0]
+        x = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
+        d = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+        gidx = j * block_n + iota  # global row id (int32-safe to 2**31 rows)
+        within = jnp.logical_and(d <= radius, gidx < limit_ref[0, 0])
+        if mask_ref is not None:  # tombstoned rows never match (matchline AND)
+            within = jnp.logical_and(within, (mask_ref[...] != 0)[0][None, :])
+        counts_ref[...] += jnp.sum(within.astype(jnp.int32), axis=1,
+                                   keepdims=True)
 
-    @pl.when(jnp.any(within))
-    def _merge():
-        # row bits carry the superblock-LOCAL offset so the key stays int32
-        lidx = (j % blocks_per_sb) * block_n + iota
-        new_keys = jnp.where(within, d * (1 << shift) + lidx, big)
-        merged = jnp.concatenate([keys_ref[0], new_keys], axis=1)  # (bq, m)
-        rank = jnp.sum(
-            (merged[:, None, :] < merged[:, :, None]).astype(jnp.int32),
-            axis=-1,
-        )  # (bq, m): unique for valid keys, >= K only for sentinels beyond K
-        n_slots = keys_ref.shape[2]
-        slot = jax.lax.broadcasted_iota(
-            jnp.int32, (*merged.shape, n_slots), 2)
-        take = jnp.logical_and(rank[..., None] == slot,
-                               (merged < big)[..., None])
-        keys_ref[0] = jnp.min(
-            jnp.where(take, merged[..., None], big), axis=1)
+        @pl.when(jnp.any(within))
+        def _merge():
+            # row bits carry the superblock-LOCAL offset: int32 keys
+            lidx = (j % blocks_per_sb) * block_n + iota
+            new_keys = jnp.where(within, d * (1 << shift) + lidx, big)
+            merged = jnp.concatenate([keys_ref[0], new_keys], axis=1)
+            rank = jnp.sum(
+                (merged[:, None, :] < merged[:, :, None]).astype(jnp.int32),
+                axis=-1,
+            )  # (bq, m): unique for valid keys, >= K only past-K sentinels
+            n_slots = keys_ref.shape[2]
+            slot = jax.lax.broadcasted_iota(
+                jnp.int32, (*merged.shape, n_slots), 2)
+            take = jnp.logical_and(rank[..., None] == slot,
+                                   (merged < big)[..., None])
+            keys_ref[0] = jnp.min(
+                jnp.where(take, merged[..., None], big), axis=1)
+
+    if scan_ref is None:
+        _scan_block()
+    else:
+        # block-summary pruning: this (query-tile, db-block) cell was
+        # proven empty of matches by the sound bound — skip all of it
+        pl.when(scan_ref[0, 0] != 0)(_scan_block)
 
 
 def _masked_streaming_nns_kernel(limit_ref, q_ref, db_ref, mask_ref,
@@ -191,10 +203,25 @@ def _masked_streaming_nns_kernel(limit_ref, q_ref, db_ref, mask_ref,
                           mask_ref=mask_ref, **kw)
 
 
+def _pruned_streaming_nns_kernel(limit_ref, q_ref, db_ref, scan_ref,
+                                 keys_ref, counts_ref, **kw):
+    """Prune-carrying variant: same body, one extra (1, 1) cell operand."""
+    _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
+                          scan_ref=scan_ref, **kw)
+
+
+def _masked_pruned_streaming_nns_kernel(limit_ref, q_ref, db_ref, mask_ref,
+                                        scan_ref, keys_ref, counts_ref,
+                                        **kw):
+    """Mask + prune variant: both extra operands, same body."""
+    _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
+                          mask_ref=mask_ref, scan_ref=scan_ref, **kw)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("radius", "max_candidates", "block_q", "block_n",
-                     "superblock", "interpret"),
+                     "superblock", "prune_block_rows", "interpret"),
 )
 def streaming_nns_pallas(
     queries: jax.Array,  # (q, words) uint32
@@ -207,6 +234,8 @@ def streaming_nns_pallas(
     block_q: int = 8,
     block_n: int = 512,
     superblock: int | None = None,  # rows per superblock (testing override)
+    prune_blocks: jax.Array | None = None,  # (q, nb) bool — True = skip
+    prune_block_rows: int | None = None,  # rows per summary block
     interpret: bool = False,
 ):
     """Streaming fixed-radius NNS -> (indices, distances, counts).
@@ -218,6 +247,16 @@ def streaming_nns_pallas(
     whose candidate buffers are merged host-side (see module docstring).
     `db_mask` marks per-row eligibility (tombstones); None scans unmasked
     through a mask-free kernel signature.
+
+    **Block pruning.** `prune_blocks` ((q, nb) bool from the core
+    `BlockSummary` bounds, `prune_block_rows` rows per summary block,
+    which must be a multiple of `block_n`) adds a (1, 1) int32 cell
+    operand gridded per (query-tile, db-block): when every query of the
+    tile prunes the block, the whole kernel body is predicated off with
+    `pl.when` — no distance, no merge, no count. The candidate/count
+    buffer inits stay outside the predicate so fully-pruned superblocks
+    still emit well-formed (empty) buffers. Sound bound => bit-identical
+    outputs.
     """
     q, words = queries.shape
     n, words2 = db.shape
@@ -244,14 +283,39 @@ def streaming_nns_pallas(
         pl.BlockSpec((block_q, words), lambda i, j: (i, 0)),
         pl.BlockSpec((block_n, words), lambda i, j: (j, 0)),
     ]
-    body = (_streaming_nns_kernel if db_mask is None
-            else _masked_streaming_nns_kernel)
     if db_mask is not None:
         mask = jnp.reshape(db_mask.astype(jnp.int32), (1, n))
         if np_ > n:  # pad rows ineligible (n_valid already excludes them)
             mask = jnp.pad(mask, ((0, 0), (0, np_ - n)))
         operands.append(mask)
         in_specs.append(pl.BlockSpec((1, block_n), lambda i, j: (0, j)))
+    if prune_blocks is not None:
+        if prune_block_rows is None or prune_block_rows % block_n:
+            raise ValueError(
+                f"prune_block_rows ({prune_block_rows}) must be a multiple "
+                f"of block_n ({block_n}) — the ops adapter aligns them")
+        # per-(query-tile, kernel-block) scan cells: a kernel block scans
+        # unless EVERY query of its tile prunes the covering summary block
+        needed = jnp.logical_not(prune_blocks)  # (q, nb)
+        if qp > q:  # pad queries contribute nothing
+            needed = jnp.pad(needed, ((0, qp - q), (0, 0)))
+        nb = needed.shape[1]
+        needed = jnp.any(needed.reshape(qp // block_q, block_q, nb), axis=1)
+        cells = jnp.repeat(needed, prune_block_rows // block_n, axis=1)
+        if cells.shape[1] < n_blocks:  # rows beyond coverage always scan
+            cells = jnp.pad(
+                cells, ((0, 0), (0, n_blocks - cells.shape[1])),
+                constant_values=True)
+        else:
+            cells = cells[:, :n_blocks]
+        operands.append(cells.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j: (i, j)))
+    body = {
+        (False, False): _streaming_nns_kernel,
+        (True, False): _masked_streaming_nns_kernel,
+        (False, True): _pruned_streaming_nns_kernel,
+        (True, True): _masked_pruned_streaming_nns_kernel,
+    }[(db_mask is not None, prune_blocks is not None)]
 
     kernel = functools.partial(
         body, radius=radius, shift=shift, big=big,

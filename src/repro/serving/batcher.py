@@ -32,7 +32,6 @@ host round-trip per flush.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Sequence
 
 import jax
@@ -253,20 +252,3 @@ class MicroBatcher:
             "cache_hit_rate": self._stats.hit_rate(),
             "per_tenant": {t: dict(v) for t, v in self._per_tenant.items()},
         }
-
-    # -- pre-protocol accessors (one-release deprecation shims) --------
-    @property
-    def cache_hit_rate(self) -> float:
-        """Deprecated: use ``stats()["cache_hit_rate"]``."""
-        warnings.warn("MicroBatcher.cache_hit_rate is deprecated; use "
-                      "stats()['cache_hit_rate']", DeprecationWarning,
-                      stacklevel=2)
-        return self._stats.hit_rate()
-
-    @property
-    def padding_fraction(self) -> float:
-        """Deprecated: use ``stats()["padding_fraction"]``."""
-        warnings.warn("MicroBatcher.padding_fraction is deprecated; use "
-                      "stats()['padding_fraction']", DeprecationWarning,
-                      stacklevel=2)
-        return self.stats()["padding_fraction"]

@@ -49,7 +49,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lsh import lsh_signature
-from repro.core.nns import EMPTY_ID
+from repro.core.nns import (
+    EMPTY_ID,
+    SUMMARY_BLOCK_ROWS,
+    build_block_summary,
+    update_block_summary,
+)
 from repro.core.quantization import (
     QuantizedTensor,
     dequantize_rowwise,
@@ -167,15 +172,22 @@ def ensure_live(engine, delta_capacity: int = 1024):
 
     The treedef changes once here (None -> arrays), so jitted serve steps
     compile once for the live layout and never again across updates or
-    epochs (as long as the base table does not grow).
+    epochs (as long as the base table does not grow). Engines built
+    outside `RecSysEngine.build` (no block summary yet) also get one here,
+    so every live catalog can prune its base scans.
     """
     if engine.delta is not None:
         return engine
     n, d = engine.item_table_q.shape
     words = engine.item_sigs.shape[1]
+    summary = engine.block_summary
+    if summary is None:
+        summary = build_block_summary(
+            np.asarray(engine.item_sigs), n_valid=n)
     return dataclasses.replace(
         engine,
         delta=empty_delta(delta_capacity, d, words),
+        block_summary=summary,
         item_mask=jnp.ones((engine.item_sigs.shape[0],), jnp.bool_)
         .at[n:].set(False))  # shard-padding rows stay dead
 
@@ -245,6 +257,17 @@ def engine_apply_updates(engine, upsert_ids=None, upsert_rows=None,
         raise DeltaFullError(
             f"{len(live)} pending rows > delta capacity {delta.capacity}")
 
+    # keep the block summary sound AND tight: every touched base row's
+    # block is recomputed exactly against the new tombstone mask (an
+    # incremental OR/AND could only loosen; a stale summary that still
+    # counts a tombstoned row is sound but must not survive compaction
+    # comparisons — see update_block_summary)
+    summary = engine.block_summary
+    base_touched = [g for g in touched if g < n_base]
+    if summary is not None and base_touched:
+        summary = update_block_summary(
+            summary, np.asarray(engine.item_sigs), mask, base_touched)
+
     new = empty_delta(delta.capacity, vals_np.shape[1], sigs_np.shape[1])
     ids_out = np.full(delta.capacity, EMPTY_ID, np.int32)
     vals_out = np.asarray(new.values).copy()
@@ -262,6 +285,7 @@ def engine_apply_updates(engine, upsert_ids=None, upsert_rows=None,
                          sigs=jnp.asarray(sigs_out),
                          capacity=delta.capacity),
         item_mask=jnp.asarray(mask),
+        block_summary=summary,
         item_hot=invalidate_rows(engine.item_hot, np.asarray(touched)))
 
 
@@ -325,10 +349,16 @@ def compact_engine(engine):
         raise ValueError("engine has no delta shard to compact")
     table, sigs, alive = materialize(engine)
     d, words = table.shape[1], sigs.shape[1]
+    br = (engine.block_summary.block_rows if engine.block_summary is not None
+          else SUMMARY_BLOCK_ROWS)
     out = dataclasses.replace(
         engine,
         item_table_q=table, item_sigs=sigs,
         item_mask=jnp.asarray(alive),
+        # fresh epoch, fresh summary: cold-built over the materialized
+        # table + alive mask (the rebuild_reference summary by definition)
+        block_summary=build_block_summary(np.asarray(sigs), br,
+                                          db_mask=alive),
         delta=empty_delta(engine.delta.capacity, d, words),
         nns_mesh=None, nns_axis=None, nns_query_axis=None)
     if engine.nns_mesh is not None and (engine.nns_axis is not None
@@ -357,9 +387,13 @@ def rebuild_reference(engine):
     else:
         item_hot = engine.item_hot
     capacity = engine.delta.capacity if engine.delta is not None else 0
+    br = (engine.block_summary.block_rows if engine.block_summary is not None
+          else SUMMARY_BLOCK_ROWS)
     return dataclasses.replace(
         engine,
         item_table_q=table, item_sigs=sigs, item_mask=jnp.asarray(alive),
+        block_summary=build_block_summary(np.asarray(sigs), br,
+                                          db_mask=alive),
         item_hot=item_hot, delta=empty_delta(capacity, d, words),
         nns_mesh=None, nns_axis=None, nns_query_axis=None)
 

@@ -44,6 +44,7 @@ from repro.core.embedding import embedding_bag
 from repro.core.lsh import lsh_signature, make_lsh_projections
 from repro.core.nns import (
     NNSResult,
+    build_block_summary,
     delta_scan,
     fixed_radius_nns,
     merge_delta_candidates,
@@ -76,7 +77,7 @@ class ServeResult(NamedTuple):
 
 @pytree_dataclass(meta_fields=(
     "cfg", "radius", "n_candidates", "top_k", "nns_mesh", "nns_axis",
-    "scan_block", "nns_query_axis"))
+    "scan_block", "nns_query_axis", "prune"))
 class RecSysEngine:
     """The deployed iMARS pipeline as a jit-able pytree.
 
@@ -114,6 +115,10 @@ class RecSysEngine:
     # epoch/update swaps never retrace the jitted serve steps.
     delta: object = None  # catalog.DeltaShard | None
     item_mask: jax.Array | None = None  # (n,) bool — alive base rows
+    # per-block occupancy summary of item_sigs (core.nns.BlockSummary) —
+    # a pytree leaf like delta/item_mask, kept fresh by serving/catalog.py
+    # on upsert/delete/compact; None disables pruning entirely
+    block_summary: object = None  # core.nns.BlockSummary | None
     cfg: rs.YoutubeDNNConfig = None
     radius: int = 96
     n_candidates: int = 50
@@ -122,12 +127,17 @@ class RecSysEngine:
     nns_axis: str | None = None
     scan_block: int | None = None  # filtering NNS: None=auto, 0=dense, >0=chunk
     nns_query_axis: str | None = None  # mesh axis scanning query blocks in parallel
+    # block pruning: None=auto (prune whenever a summary exists and the
+    # plan streams), False=force off, True=explicitly on (same as auto —
+    # the scan still needs a summary and a streaming plan to prune)
+    prune: bool | None = None
 
     @staticmethod
     def build(params: dict, cfg: rs.YoutubeDNNConfig, *, lsh_bits: int = 256,
               radius: int = 96, n_candidates: int = 50, top_k: int = 10,
               hot_rows: int = 0, item_freqs=None, uiet_freqs: dict | None = None,
-              scan_block: int | None = None, key=None) -> "RecSysEngine":
+              scan_block: int | None = None, prune: bool | None = None,
+              key=None) -> "RecSysEngine":
         """Quantize a trained YoutubeDNN into a serving engine.
 
         hot_rows: capacity of the per-table hot-row caches (0 disables).
@@ -136,6 +146,9 @@ class RecSysEngine:
         scan_block: filtering-stage NNS execution plan — None routes dense vs
         streaming automatically by catalog size, 0 forces the dense (q, n)
         path, a positive value forces the streaming scan with that chunk.
+        prune: block-summary pruning of the streaming scan — None=auto
+        (prune whenever the plan streams), False=off. Bit-identical either
+        way; pruned scans also report per-query `blocks_touched`.
         """
         key = jax.random.key(7) if key is None else key
         # cfg is static jit metadata -> its feature map must be hashable
@@ -158,8 +171,9 @@ class RecSysEngine:
             cfg=cfg, tables_q=tables_q, item_table_q=item_q,
             genre_table_q=genre_q, item_sigs=sigs, params=params,
             lsh_proj=proj, item_hot=item_hot, uiet_hot=uiet_hot,
+            block_summary=build_block_summary(sigs),
             radius=radius, n_candidates=n_candidates, top_k=top_k,
-            scan_block=scan_block)
+            scan_block=scan_block, prune=prune)
 
     def shard(self, mesh: jax.sharding.Mesh, axis: str | None = None, *,
               query_axis: str | None = None) -> "RecSysEngine":
@@ -178,18 +192,32 @@ class RecSysEngine:
         if axis is None and query_axis is None:
             raise ValueError("shard() needs a db axis, a query_axis, or both")
         sigs, mask = self.item_sigs, self.item_mask
+        summary = self.block_summary
         if axis is not None:
             n_shards = mesh.shape[axis]
             n = sigs.shape[0]
             pad = (-n) % n_shards
             sigs = jnp.pad(sigs, ((0, pad), (0, 0)))
-            sigs = jax.device_put(sigs, NamedSharding(mesh, P(axis, None)))
             if mask is not None:  # tombstones ride the banks (pad rows dead)
                 mask = jnp.pad(mask[: n], (0, pad))
+            if summary is not None:
+                # the summary must cover the PADDED layout so each bank owns
+                # whole summary blocks; pad rows are ineligible via n_valid.
+                # Misaligned shard sizes drop the summary (unpruned banks —
+                # a pure execution fallback, results unchanged).
+                br = summary.block_rows
+                per_shard = sigs.shape[0] // n_shards
+                if per_shard % br == 0:
+                    summary = build_block_summary(
+                        np.asarray(sigs), br, db_mask=mask, n_valid=n)
+                else:
+                    summary = None
+            sigs = jax.device_put(sigs, NamedSharding(mesh, P(axis, None)))
+            if mask is not None:
                 mask = jax.device_put(mask, NamedSharding(mesh, P(axis)))
         kw = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
-        kw.update(item_sigs=sigs, item_mask=mask, nns_mesh=mesh,
-                  nns_axis=axis, nns_query_axis=query_axis)
+        kw.update(item_sigs=sigs, item_mask=mask, block_summary=summary,
+                  nns_mesh=mesh, nns_axis=axis, nns_query_axis=query_axis)
         return RecSysEngine(**kw)
 
     # ------------------------------------------------------------------
@@ -317,7 +345,13 @@ def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
     scan densely (the shard is bounded) and the two candidate buffers merge
     into the exact rebuilt-table (distance, id) order
     (`core.nns.merge_delta_candidates`).
+
+    Every plan threads the engine's `block_summary` + `prune` knob down to
+    the scan: streaming plans skip summary blocks whose sound lower bound
+    exceeds the radius (bit-identical results, `blocks_touched` counters
+    in the NNSResult); dense plans and `prune=False` scan unpruned.
     """
+    summary, prune = engine.block_summary, engine.prune
     if engine.nns_mesh is not None and engine.nns_axis is not None:
         base = sharded_fixed_radius_nns(
             engine.nns_mesh, engine.nns_axis, q_sigs, engine.item_sigs,
@@ -325,7 +359,7 @@ def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
             n_valid=engine.item_table_q.shape[0],
             scan_block=engine.scan_block,
             query_axis=engine.nns_query_axis,
-            db_mask=engine.item_mask)
+            db_mask=engine.item_mask, summary=summary, prune=prune)
     elif engine.nns_mesh is not None:  # query-parallel only, db replicated
         # n_valid still matters: item_sigs may carry pad rows from an
         # earlier bank-sharded incarnation of this engine
@@ -333,12 +367,13 @@ def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
             engine.nns_mesh, engine.nns_query_axis, q_sigs, engine.item_sigs,
             engine.radius, engine.n_candidates, scan_block=engine.scan_block,
             n_valid=engine.item_table_q.shape[0],
-            db_mask=engine.item_mask)
+            db_mask=engine.item_mask, summary=summary, prune=prune)
     else:
         base = fixed_radius_nns(q_sigs, engine.item_sigs, engine.radius,
                                 engine.n_candidates,
                                 scan_block=engine.scan_block,
-                                db_mask=engine.item_mask)
+                                db_mask=engine.item_mask,
+                                summary=summary, prune=prune)
     if engine.delta is None or engine.delta.capacity == 0:
         return base
     pending = delta_scan(q_sigs, engine.delta.sigs, engine.delta.ids,

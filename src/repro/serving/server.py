@@ -50,15 +50,12 @@ class ServingError(RuntimeError):
     """Base class for every typed serving-tier failure."""
 
 
-class ServerConfigError(ServingError, ValueError):
+class ServerConfigError(ServingError):
     """A front-end was constructed or called with invalid knobs."""
 
 
-class SchemaMismatchError(ServingError, ValueError):
-    """`swap_engine` was handed an engine with a different query schema.
-
-    Subclasses ValueError so pre-protocol callers catching ValueError keep
-    working (one-release compatibility; catch `SchemaMismatchError`)."""
+class SchemaMismatchError(ServingError):
+    """`swap_engine` was handed an engine with a different query schema."""
 
 
 class ServerClosedError(ServingError):

@@ -15,6 +15,7 @@ from repro.models import recsys as rs
 from repro.serving import (
     AsyncServer,
     MicroBatcher,
+    ServerConfigError,
     RecSysEngine,
     lookup_step,
     rank_stage_step,
@@ -119,9 +120,9 @@ def test_pipelined_result_and_ticket_api(served):
 
 def test_async_server_rejects_bad_knobs(served):
     engine, _ = served
-    with pytest.raises(ValueError, match="depth"):
+    with pytest.raises(ServerConfigError, match="depth"):
         AsyncServer(engine, depth=0)
-    with pytest.raises(ValueError, match="coalesce"):
+    with pytest.raises(ServerConfigError, match="coalesce"):
         AsyncServer(engine, coalesce=0)
 
 

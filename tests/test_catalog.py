@@ -30,6 +30,7 @@ from repro.serving import (
     LiveCatalog,
     MicroBatcher,
     RecSysEngine,
+    SchemaMismatchError,
     invalidate_rows,
     pin_rows,
 )
@@ -375,7 +376,7 @@ def test_swap_engine_rejects_schema_change(served):
     engine, _ = served
     server = MicroBatcher(engine, max_batch=8)
     cfg = engine.cfg._replace(user_features={"user_id": 10})
-    with pytest.raises(ValueError, match="schema"):
+    with pytest.raises(SchemaMismatchError, match="schema"):
         server.swap_engine(dataclasses.replace(engine, cfg=cfg))
 
 

@@ -118,6 +118,10 @@ def _public_api():
         ("rank_stage_step", rank_stage_step),
         # NNS entries
         ("fixed_radius_nns", nns.fixed_radius_nns),
+        ("BlockSummary", nns.BlockSummary),
+        ("build_block_summary", nns.build_block_summary),
+        ("update_block_summary", nns.update_block_summary),
+        ("summary_block_bounds", nns.summary_block_bounds),
         ("fixed_radius_nns_async", nns.fixed_radius_nns_async),
         ("sharded_fixed_radius_nns", nns.sharded_fixed_radius_nns),
         ("query_parallel_nns", nns.query_parallel_nns),

@@ -91,8 +91,8 @@ def test_factory_rejects_unknown_mode_and_knobs(served):
         make_server(engine, "sync", depth=2)
     with pytest.raises(ServerConfigError, match="tenants"):
         make_server(engine, "pipelined", tenants=4)
-    # config errors are also ValueErrors (one release of back-compat)
-    with pytest.raises(ValueError):
+    # unknown knobs land in the same typed family (no ValueError base)
+    with pytest.raises(ServerConfigError):
         make_server(engine, "concurrent", bogus_knob=1)
 
 
@@ -153,8 +153,8 @@ def test_closed_server_rejects_submits(served, mode):
 
 @pytest.mark.parametrize("mode", MODES)
 def test_swap_engine_schema_mismatch_is_typed(served, mode):
-    """A schema-mismatched swap raises SchemaMismatchError (a ValueError,
-    for one release of back-compat) and leaves the server serving."""
+    """A schema-mismatched swap raises SchemaMismatchError and leaves the
+    server serving."""
     engine, data = served
     cfg2 = rs.YoutubeDNNConfig(
         n_items=data.n_items, user_features={"user_id": data.n_users},
@@ -164,7 +164,6 @@ def test_swap_engine_schema_mismatch_is_typed(served, mode):
     server = _make(engine, mode)
     with pytest.raises(SchemaMismatchError, match="schema"):
         server.swap_engine(other)
-    assert isinstance(SchemaMismatchError("x"), ValueError)
     out = server.serve_many(_stream(data, 3))
     assert all(s.ok for s in out)
     server.close()
@@ -305,18 +304,21 @@ def test_concurrent_submitters_one_drain(served):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# retired shims stay retired
 # ---------------------------------------------------------------------------
-def test_deprecated_properties_warn_and_match_stats(served):
+def test_pre_protocol_shims_are_gone(served):
     engine, data = served
     server = _make(engine, "sync")
     server.serve_many(_stream(data))
-    with pytest.warns(DeprecationWarning, match="stats"):
-        hit = server.cache_hit_rate
-    with pytest.warns(DeprecationWarning, match="stats"):
-        pad = server.padding_fraction
+    # the one-release deprecated accessors were removed: stats() is the API
+    assert not hasattr(server, "cache_hit_rate")
+    assert not hasattr(server, "padding_fraction")
     st = server.stats()
-    assert hit == st["cache_hit_rate"] and pad == st["padding_fraction"]
+    assert 0.0 <= st["cache_hit_rate"] <= 1.0
+    assert 0.0 <= st["padding_fraction"] < 1.0
+    # typed errors no longer alias ValueError (pre-protocol compat window)
+    assert not issubclass(ServerConfigError, ValueError)
+    assert not issubclass(SchemaMismatchError, ValueError)
 
 
 # ---------------------------------------------------------------------------

@@ -8,14 +8,19 @@ them — files pair up by benchmark name) and it prints a side-by-side table
 with each side's provenance (git sha + timestamp, stamped by the shared
 writer) and exits non-zero on any regression beyond the threshold.
 
-A row regresses when its throughput metric drops by more than
-``--threshold`` (default 10%), or its latency metric rises by more than
-it. Per row, the first metric present wins: ``qps_at_slo=`` (the load
-harness's provisioning number), then ``qps=``, then ``p99_ms=`` (tail
-latency, lower is better), then the ``us_per_call`` column. Rows carry an ``ok=False`` style self-check in
-``derived`` sometimes; those are the benchmark's own gates and are not
-re-judged here. Rows present on only one side are listed but never fail
-the diff (benchmarks grow cells over time).
+A row regresses when any throughput metric drops by more than
+``--threshold`` (default 10%), or any lower-is-better metric rises by
+more than it. Every metric present on *both* sides of a row is judged:
+``qps_at_slo=`` (the load harness's provisioning number), ``qps=``,
+``p99_ms=`` (tail latency, lower is better), ``blocks_touched=`` and
+``scan_frac=`` (block-summary pruning effectiveness — lower is better;
+a pruned scan touching more of the catalog is a perf regression even
+when raw qps holds), plus the ``us_per_call`` column. Rows carry an
+``ok=False`` style self-check in ``derived`` sometimes; those are the
+benchmark's own gates and are not re-judged here. Rows present on only
+one side are listed but never fail the diff (benchmarks grow cells over
+time), and a metric present on only one side of a row is ignored the
+same way.
 
 Stdlib-only (like tools/check_docs.py), so CI can run it without a jax
 install:
@@ -32,13 +37,16 @@ import re
 import sys
 from pathlib import Path
 
-# per-row metric, first match wins: throughput (higher better) before
-# latency (lower better); anchored so e.g. achieved_qps= never parses as
-# qps= and p50_ms= never parses as p99_ms=
+# per-row metrics — every one found in `derived` is judged (bool = lower
+# is better); anchored so e.g. achieved_qps= never parses as qps= and
+# p50_ms= never parses as p99_ms=
 _METRICS = (
     ("qps_at_slo", re.compile(r"(?:^|;)qps_at_slo=([0-9.eE+-]+)"), False),
     ("qps", re.compile(r"(?:^|;)qps=([0-9.eE+-]+)"), False),
     ("p99_ms", re.compile(r"(?:^|;)p99_ms=([0-9.eE+-]+)"), True),
+    ("blocks_touched", re.compile(r"(?:^|;)blocks_touched=([0-9.eE+-]+)"),
+     True),
+    ("scan_frac", re.compile(r"(?:^|;)scan_frac=([0-9.eE+-]+)"), True),
 )
 
 
@@ -55,20 +63,22 @@ def load_artifacts(path: Path) -> dict[str, dict]:
     return out
 
 
-def row_metric(row: dict):
-    """(kind, value) — the first `_METRICS` field the derived string
-    carries, else ('us_per_call', v); (None, None) when none is usable."""
+def row_metrics(row: dict) -> dict[str, float]:
+    """{kind: value} for every `_METRICS` field the derived string carries,
+    plus the 'us_per_call' column; NaN values (e.g. p99 of an all-shed run)
+    are not comparable and are dropped."""
     derived = row.get("derived", "") or ""
+    out = {}
     for kind, rx, _ in _METRICS:
         m = rx.search(derived)
         if m:
             v = float(m.group(1))
-            if v == v:  # NaN (e.g. p99 of an all-shed run) is not comparable
-                return kind, v
+            if v == v:
+                out[kind] = v
     us = row.get("us_per_call")
     if isinstance(us, (int, float)) and us > 0:
-        return "us_per_call", float(us)
-    return None, None
+        out["us_per_call"] = float(us)
+    return out
 
 
 def metric_lower_is_better(kind: str) -> bool:
@@ -92,19 +102,27 @@ def compare_bench(name: str, old: dict, new: dict, threshold: float):
         if row_name not in old_rows:
             yield row_name, "new", "row only in NEW", False
             continue
-        kind, was = row_metric(old_rows[row_name])
-        kind2, now = row_metric(new_rows[row_name])
-        if kind is None or kind != kind2:
+        olds, news = row_metrics(old_rows[row_name]), \
+            row_metrics(new_rows[row_name])
+        shared = [k for k in olds if k in news]  # _METRICS order preserved
+        if not shared:
             yield row_name, "skip", "no comparable metric", False
             continue
-        ratio = now / was if was else float("inf")
-        if metric_lower_is_better(kind):
-            bad = ratio > 1.0 + threshold
-            detail = f"{kind} {was:.1f} -> {now:.1f} ({ratio:.2f}x)"
-        else:
-            bad = ratio < 1.0 - threshold
-            detail = f"{kind} {was:.0f} -> {now:.0f} ({ratio:.2f}x)"
-        yield row_name, ("REGRESSION" if bad else "ok"), detail, bad
+        any_bad, details = False, []
+        for kind in shared:
+            was, now = olds[kind], news[kind]
+            ratio = (now / was) if was else (float("inf") if now else 1.0)
+            if metric_lower_is_better(kind):
+                bad = ratio > 1.0 + threshold
+                details.append(f"{kind} {was:.1f} -> {now:.1f} "
+                               f"({ratio:.2f}x)")
+            else:
+                bad = ratio < 1.0 - threshold
+                details.append(f"{kind} {was:.0f} -> {now:.0f} "
+                               f"({ratio:.2f}x)")
+            any_bad |= bad
+        yield (row_name, ("REGRESSION" if any_bad else "ok"),
+               ", ".join(details), any_bad)
 
 
 def main(argv: list[str]) -> int:
