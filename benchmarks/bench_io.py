@@ -63,3 +63,76 @@ def write_bench_json(name: str, rows: list[dict], *, out_dir: str | None = None,
 def csv_rows_to_json(rows: list[tuple]) -> list[dict]:
     """Adapt the (name, us_per_call, derived) CSV tuples to JSON dicts."""
     return [{"name": n, "us_per_call": us, "derived": d} for n, us, d in rows]
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    """The ``derived`` string's ``key=value;key=value`` pairs as a dict."""
+    out = {}
+    for seg in (derived or "").split(";"):
+        if not seg:
+            continue
+        key, eq, value = seg.partition("=")
+        if not eq or not key:
+            raise ValueError(f"derived segment {seg!r} is not key=value "
+                             f"(in {derived!r})")
+        out[key] = value
+    return out
+
+
+def check_row_schema(rows: list[dict], required: tuple[str, ...] = (),
+                     *, within: tuple[str, ...] = ()) -> None:
+    """Validate the shared csv-row shape; raises ValueError on drift.
+
+    Every row must be exactly ``{name, us_per_call, derived}`` with a
+    numeric ``us_per_call`` and a ``;``-joined ``key=value`` derived
+    string carrying at least the `required` keys. For each name prefix in
+    `within`, all matching rows must expose the SAME derived-key set —
+    the guard against one cell of a sweep silently dropping a metric the
+    others emit (a row whose sweep mate carries a metric it lacks reads
+    as "metric fine here" when it was never measured). Rows that report a
+    ``status`` key (failed / skipped cells) are schema-exempt within
+    their group: they legitimately carry no measurements.
+    """
+    problems = []
+    for i, row in enumerate(rows):
+        if set(row) != {"name", "us_per_call", "derived"}:
+            problems.append(f"row {i}: keys {sorted(row)} != "
+                            f"['derived', 'name', 'us_per_call']")
+            continue
+        if not isinstance(row["name"], str) or not row["name"]:
+            problems.append(f"row {i}: empty or non-string name")
+        if not isinstance(row["us_per_call"], (int, float)):
+            problems.append(f"row {i} ({row['name']}): non-numeric "
+                            f"us_per_call {row['us_per_call']!r}")
+        try:
+            keys = parse_derived(row["derived"])
+        except ValueError as e:
+            problems.append(f"row {i} ({row['name']}): {e}")
+            continue
+        missing = [k for k in required
+                   if k not in keys and "status" not in keys]
+        if missing:
+            problems.append(f"row {i} ({row['name']}): derived missing "
+                            f"required keys {missing}")
+    for prefix in within:
+        schemas = {}
+        for row in rows:
+            if not isinstance(row.get("name"), str) \
+                    or not row["name"].startswith(prefix):
+                continue
+            try:
+                keys = parse_derived(row.get("derived", ""))
+            except ValueError:
+                continue  # already reported above
+            if "status" in keys:
+                continue
+            schemas.setdefault(frozenset(keys), []).append(row["name"])
+        if len(schemas) > 1:
+            variants = " vs ".join(
+                f"{sorted(k)} ({names[0]}...)"
+                for k, names in sorted(schemas.items(), key=str))
+            problems.append(f"group {prefix!r}: inconsistent derived "
+                            f"schemas: {variants}")
+    if problems:
+        raise ValueError("benchmark row-schema violations:\n  "
+                         + "\n  ".join(problems))

@@ -202,10 +202,14 @@ def _cell(n: int, path: str) -> dict:
            "rss_peak_delta_bytes": int(rss_delta),
            "dense_matrix_bytes": Q * n * 4,
            "scan_block": scan_block}
-    if path == "streaming":
-        # single-device scan only: the qp2 cells replicate the catalog once
-        # per fake device in-process, so the 10%-of-dense metric would be
-        # meaningless noise for them
+    if path in ("streaming", "zipf_stream", "zipf_pruned"):
+        # every single-device streaming-family cell carries the memory
+        # metric (this used to be the plain `streaming` row only, so the
+        # zipf cells' rows pattern-matched as "memory fine" when it was
+        # never measured — check_row_schema now pins the per-group schema).
+        # The qp2 cells stay excluded: they replicate the catalog once per
+        # fake device in-process, so 10%-of-dense would be meaningless
+        # noise for them
         row["mem_lt_10pct_dense"] = bool(rss_delta < 0.1 * Q * n * 4)
     if path == "zipf_pruned":
         # scan_frac: per-query mean fraction of summary blocks the bound
@@ -311,8 +315,12 @@ def rows(sizes=SIZES, repeats: int = REPS):
                     (r for r in json_rows
                      if r["n"] == n and r["path"] == "zipf_stream"
                      and r["status"] == "ok"), None)
-                if stream is not None:
-                    row["speedup_vs_unpruned"] = row["qps"] / stream["qps"]
+                # NaN (not absent) when the stream cell failed: the row
+                # schema stays uniform across the sweep and bench_compare
+                # drops NaN metrics as not-comparable
+                row["speedup_vs_unpruned"] = (
+                    row["qps"] / stream["qps"] if stream is not None
+                    else float("nan"))
             json_rows.append(row)
             if row["status"] != "ok":
                 out.append((f"nns_scale/{path}/n{n}", 0.0, "status=failed"))
@@ -423,7 +431,11 @@ def main():
         print(json.dumps(_cell(int(args.cell[0]), args.cell[1])))
         return
 
-    from benchmarks.bench_io import csv_rows_to_json, write_bench_json
+    from benchmarks.bench_io import (
+        check_row_schema,
+        csv_rows_to_json,
+        write_bench_json,
+    )
 
     if args.sizes:
         sizes = tuple(int(s) for s in args.sizes.split(","))
@@ -432,6 +444,14 @@ def main():
     out, json_rows = rows(sizes, args.repeats)
     for name, us, derived in out:
         print(f"{name},{us:.3f},{derived}")
+    # schema gate: every cell of a path carries the same metric set (a
+    # sweep cell silently dropping a metric fails the run, it doesn't
+    # ship a hole in the artifact)
+    check_row_schema(
+        csv_rows_to_json(out),
+        within=tuple(f"nns_scale/{p}/" for p in
+                     ("streaming", "streaming_qp2", "zipf_stream",
+                      "zipf_pruned", "dense")))
     # `rows` carries the one csv shape bench_compare diffs; the raw
     # per-cell measurements (rss deltas, compile times, ...) ride in
     # `cells` — previously they *were* the rows, which broke any tool

@@ -325,6 +325,15 @@ def fixed_radius_nns(
       (distance, index) ascending — the exact dense threshold + top-k
       order, whatever the execution plan.
     """
+    if isinstance(db_sigs, np.memmap):
+        # out-of-core table handle: the host-driven scan loads admitted
+        # summary blocks on demand instead of residing the DB (tiered
+        # catalog cold shard). Same bits, different residency.
+        return out_of_core_nns(
+            query_sigs, db_sigs, radius, max_candidates, db_mask=db_mask,
+            scan_block=scan_block, n_valid=n_valid, summary=summary,
+            prune=prune)
+
     n, words = db_sigs.shape
     use_stream = _plan_streams(n, scan_block)
     block = DEFAULT_SCAN_BLOCK if not scan_block else scan_block
@@ -363,6 +372,61 @@ def fixed_radius_nns(
         idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
         dist = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=int(BIG))
     return NNSResult(indices=idx, distances=dist, counts=counts)
+
+
+# pre-jitted prune-mask for host-driven scans (radius static)
+_prune_mask_jit = jax.jit(_prune_mask, static_argnums=(2,))
+
+# rows gathered per jitted chunk scan of the out-of-core driver: large
+# enough to amortize dispatch (32 calls at 8M rows), small enough that the
+# resident chunk buffers stay ~8 MB each at 256-bit signatures (the gather
+# copy, its device image, and one in-flight predecessor pin ~4 of these at
+# peak, so the chunk size bounds the scan's whole RSS footprint)
+OUTOFCORE_CHUNK_ROWS = 1 << 18
+
+
+def out_of_core_nns(
+    query_sigs: jax.Array,  # (q, words) uint32
+    db_sigs: np.ndarray,  # (n, words) uint32 host ndarray / np.memmap
+    radius: int,
+    max_candidates: int = 128,
+    db_mask=None,  # (n,) bool HOST array — tombstones
+    *,
+    scan_block: int | None = None,  # inner chunk-scan block (>0 or None)
+    n_valid: int | None = None,
+    summary: BlockSummary | None = None,
+    prune: bool | None = None,
+    chunk_rows: int = OUTOFCORE_CHUNK_ROWS,
+) -> NNSResult:
+    """Fixed-radius NNS over a host-resident (memmapped) signature DB.
+
+    The scan itself is already O(q*K) resident; this entry removes the
+    last O(n) residency — the DB — by gathering only summary blocks at
+    least one query admits, one fixed-size chunk per jitted call. Blocks
+    every query prunes never have their memmap pages touched, so the
+    process RSS tracks the admitted working set, not the catalog size.
+    Results (including `blocks_touched`) are bit-identical to the resident
+    streaming scan with the same mask/summary: admitted blocks are scanned
+    in full with genuine rows, ascending disjoint row ranges merge exactly
+    (`merge_chunk_buffers`), and prune soundness makes scanning a block
+    some queries pruned a no-op for those queries. `fixed_radius_nns`
+    routes here automatically when `db_sigs` is an `np.memmap`. The
+    `superblock` knob does not apply (chunks are far below key capacity).
+    """
+    block = DEFAULT_SCAN_BLOCK if not scan_block else scan_block
+    prune_np = blocks_touched = block_rows = None
+    if summary is not None and prune is not False:
+        pm, blocks_touched = _prune_mask_jit(
+            jnp.asarray(query_sigs), summary, radius)
+        prune_np = np.asarray(pm)
+        block_rows = summary.block_rows
+    indices, distances, counts = ops.streaming_nns_outofcore(
+        query_sigs, db_sigs, radius=radius, max_candidates=max_candidates,
+        scan_block=block, n_valid=n_valid, db_mask=db_mask,
+        prune_blocks=prune_np, prune_block_rows=block_rows,
+        chunk_rows=chunk_rows)
+    return NNSResult(indices=indices, distances=distances, counts=counts,
+                     blocks_touched=blocks_touched)
 
 
 # pre-jitted entry for the scan: knobs that fix shapes/plans are static,
@@ -676,6 +740,40 @@ def merge_delta_candidates(base: NNSResult, delta: NNSResult,
     return NNSResult(indices=idx, distances=d,
                      counts=base.counts + delta.counts,
                      blocks_touched=base.blocks_touched)
+
+
+def query_parallel_delta_scan(
+    mesh: jax.sharding.Mesh,
+    query_axis: str,
+    query_sigs: jax.Array,  # (q, words) sharded over `query_axis`
+    delta_sigs: jax.Array,  # (D, words) replicated
+    delta_ids: jax.Array,  # (D,) int32 replicated, EMPTY_ID = free slot
+    radius: int,
+    max_candidates: int = 128,
+) -> NNSResult:
+    """`delta_scan` with the QUERY batch sharded over `mesh[query_axis]`.
+
+    The delta shard is bounded and replicated with the catalog, so each
+    device scans all of it for its own query block — zero communication,
+    the exact dual of `query_parallel_nns`. The scan is per-query
+    independent, so results bit-match the replicated `delta_scan` while
+    doing 1/P of the work per device instead of all of it on every device
+    (the ROADMAP delta-scan sharding item). Queries are padded to a
+    multiple of the axis size; pad rows are sliced off the result.
+    """
+    padded, pad = _pad_queries_to_axis(mesh, query_axis, query_sigs)
+
+    def local_scan(q_local, dsigs, dids):
+        return delta_scan(q_local, dsigs, dids, radius, max_candidates)
+
+    q_spec = P(query_axis)
+    fn = shard_map(
+        local_scan, mesh=mesh, in_specs=(q_spec, P(), P()),
+        out_specs=NNSResult(indices=q_spec, distances=q_spec,
+                            counts=q_spec, blocks_touched=None),
+        check_vma=False,
+    )
+    return _slice_query_pad(fn(padded, delta_sigs, delta_ids), pad)
 
 
 def delta_aware_nns(

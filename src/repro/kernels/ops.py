@@ -23,19 +23,26 @@ backend ran. Ops with no Pallas implementation fall back to their ref.
 """
 from __future__ import annotations
 
+import functools
 import math
+import mmap
 import os
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.embedding_pool import embedding_pool_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hamming_nns import hamming_distances_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
-from repro.kernels.streaming_nns import streaming_nns_pallas
+from repro.kernels.streaming_nns import (
+    BIG_DIST,
+    merge_chunk_buffers,
+    streaming_nns_pallas,
+)
 from repro.utils import round_up
 
 _MODES = ("pallas", "interpret", "ref")
@@ -214,6 +221,149 @@ def streaming_nns(queries, db, *, radius, max_candidates,
                     n_valid=n_valid, superblock=superblock, db_mask=db_mask,
                     prune_blocks=prune_blocks,
                     prune_block_rows=prune_block_rows)
+
+
+# chunk scans allowed on the async dispatch queue at once; each pins its
+# (chunk_rows, words) input buffer until it retires
+_OUTOFCORE_INFLIGHT = 2
+
+
+def madvise_dontneed(arr) -> bool:
+    """Drop a memmapped array's resident page cache (MADV_DONTNEED).
+
+    The out-of-core scan copies the pages it needs before scanning, so
+    dropping them immediately keeps a shard's resident set at O(one
+    gather) instead of accumulating every admitted page across batches.
+    No-op (returns False) for plain ndarrays or platforms without
+    madvise; the data is never modified, only evicted.
+    """
+    mm = getattr(arr, "_mmap", None)
+    if mm is None or not hasattr(mmap, "MADV_DONTNEED"):
+        return False
+    try:
+        mm.madvise(mmap.MADV_DONTNEED)
+        return True
+    except (ValueError, OSError):
+        return False
+
+
+def madvise_random(arr) -> bool:
+    """Disable kernel readahead on a memmapped array (MADV_RANDOM).
+
+    Scattered candidate-row gathers fault one 4KB page at a time, but a
+    default (MADV_NORMAL) mapping pulls up to 128KB of readahead per
+    fault — a few thousand scattered faults can drag hundreds of MB of
+    dead neighbours into the page cache. Out-of-core access to a shard
+    is either scattered (candidate rows) or an explicit block-sized
+    gather copy (the streaming scan), so readahead never helps and the
+    resident set shrinks ~30x with it off. Same no-op guards as
+    `madvise_dontneed`.
+    """
+    mm = getattr(arr, "_mmap", None)
+    if mm is None or not hasattr(mmap, "MADV_RANDOM"):
+        return False
+    try:
+        mm.madvise(mmap.MADV_RANDOM)
+        return True
+    except (ValueError, OSError):
+        return False
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("radius", "max_candidates", "scan_block"))
+def _outofcore_chunk_scan(queries, chunk, n_rows, db_mask, row_map, *,
+                          radius, max_candidates, scan_block):
+    """One resident-chunk scan of the out-of-core driver: the usual
+    streaming dispatch plus the local->global row remap (row_map is the
+    monotonically increasing gather index, so the remap preserves the
+    buffer's (distance, row) sort order)."""
+    idx, dist, counts = dispatch(
+        "streaming_nns", queries, chunk, radius=radius,
+        max_candidates=max_candidates, scan_block=scan_block,
+        n_valid=n_rows, db_mask=db_mask)
+    gidx = jnp.where(idx >= 0, jnp.take(row_map, jnp.clip(idx, 0, None)), -1)
+    return gidx, dist, counts
+
+
+def streaming_nns_outofcore(queries, db, *, radius, max_candidates,
+                            scan_block=4096, n_valid=None, db_mask=None,
+                            prune_blocks=None, prune_block_rows=None,
+                            chunk_rows=1 << 18):
+    """`streaming_nns` over a host-resident (typically `np.memmap`) DB.
+
+    The driver walks the signature DB in admitted summary blocks: blocks
+    every query prunes are never gathered, so their memmap pages are never
+    touched — the resident set is O(admitted blocks), not O(n). Admitted
+    blocks are compacted into fixed-(q, chunk_rows) buffers (zero-padded,
+    padding masked ineligible via `n_valid`/`db_mask`) so the whole scan
+    compiles once; each buffer holds only genuine DB rows, so no per-query
+    prune mask is needed downstream — prune soundness guarantees a pruned
+    block contains no matches for that query, hence scanning it anyway is
+    a no-op on the output. Per-chunk buffers merge exactly via
+    `merge_chunk_buffers` (ascending disjoint row ranges).
+
+    `db`: (n, words) uint32 ndarray/memmap. `db_mask`/`prune_blocks` are
+    host arrays. Returns (indices, distances, counts) bit-identical to the
+    resident `streaming_nns` with the same mask and a sound prune mask.
+
+    Two bounds keep peak RSS at O(chunk), not O(admitted set): at most
+    `_OUTOFCORE_INFLIGHT` chunk scans ride the async dispatch queue (each
+    pins its (chunk_rows, words) input buffer until it retires), and a
+    memmapped `db`'s page cache is dropped (MADV_DONTNEED) after each
+    group's gather copy — the admitted pages of group g are dead the
+    moment the copy exists, so they never accumulate across groups or
+    batches.
+    """
+    n = int(db.shape[0])
+    q = int(queries.shape[0])
+    limit = n if n_valid is None else int(n_valid)
+    queries = jnp.asarray(queries)
+    mask_np = None if db_mask is None else np.asarray(db_mask, bool)
+
+    if prune_blocks is not None:
+        br = int(prune_block_rows)
+        prune_np = np.asarray(prune_blocks, bool)
+        kept = np.nonzero(~prune_np.all(axis=0))[0]
+    else:
+        br = max(1, int(chunk_rows))
+        kept = np.arange(-(-n // br))
+    kept = kept[kept * br < limit]
+
+    if kept.size == 0 or limit <= 0:
+        return (jnp.full((q, max_candidates), -1, jnp.int32),
+                jnp.full((q, max_candidates), BIG_DIST, jnp.int32),
+                jnp.zeros((q,), jnp.int32))
+
+    group = max(1, int(chunk_rows) // br)  # admitted blocks per jit call
+    cap = group * br
+    chunks, counts = [], jnp.zeros((q,), jnp.int32)
+    for g in range(0, kept.size, group):
+        blk = kept[g:g + group]
+        idx = (blk[:, None] * br + np.arange(br)).reshape(-1)
+        within = idx < limit
+        idx_c = np.minimum(idx, n - 1)
+        rows = np.asarray(db[idx_c])  # memmap gather: pages of kept blocks
+        elig = within if mask_np is None else (within & mask_np[idx_c])
+        n_rows = rows.shape[0]
+        if n_rows < cap:  # final short group: zero-pad to the fixed shape
+            rows = np.concatenate(
+                [rows, np.zeros((cap - n_rows,) + rows.shape[1:], rows.dtype)])
+            elig = np.concatenate([elig, np.zeros(cap - n_rows, bool)])
+            idx_c = np.concatenate(
+                [idx_c, np.zeros(cap - n_rows, idx_c.dtype)])
+        gidx, dist, c = _outofcore_chunk_scan(
+            queries, jnp.asarray(rows), jnp.int32(n_rows),
+            jnp.asarray(elig), jnp.asarray(idx_c.astype(np.int32)),
+            radius=radius, max_candidates=max_candidates,
+            scan_block=scan_block)
+        del rows
+        madvise_dontneed(db)
+        chunks.append((gidx, dist))
+        counts = counts + c
+        if len(chunks) >= _OUTOFCORE_INFLIGHT:
+            chunks[-_OUTOFCORE_INFLIGHT][0].block_until_ready()
+    gidx, dist = merge_chunk_buffers(chunks, max_candidates)
+    return gidx, dist, counts
 
 
 def int8_matmul(x, w, x_scale, w_scale):

@@ -140,6 +140,29 @@ def merge_candidate_buffers(indices: jax.Array, distances: jax.Array,
             jnp.take_along_axis(distances, order, axis=1))
 
 
+def merge_chunk_buffers(chunks, max_candidates: int):
+    """Merge the per-chunk buffers of a host-driven out-of-core scan.
+
+    `chunks` is a list of (indices, distances) pairs — each (q, K) with
+    GLOBAL row ids — produced by scanning ascending, disjoint row ranges of
+    one memmapped DB. That is exactly the superblock-merge precondition
+    (per-buffer (dist, row) sort, invalids at the tail, ascending disjoint
+    row ranges across buffers), so `merge_candidate_buffers` is exact here
+    too: the out-of-core scan bit-matches the resident scan by the same
+    argument that makes the multi-superblock kernel exact. An empty chunk
+    list (every block pruned) yields the all-sentinel result.
+    """
+    if not chunks:
+        raise ValueError("merge_chunk_buffers: no chunks (caller emits "
+                         "the empty result for fully-pruned scans)")
+    if len(chunks) == 1:
+        idx, dist = chunks[0]
+        return idx[:, :max_candidates], dist[:, :max_candidates]
+    idx = jnp.concatenate([c[0] for c in chunks], axis=1)
+    dist = jnp.concatenate([c[1] for c in chunks], axis=1)
+    return merge_candidate_buffers(idx, dist, max_candidates)
+
+
 def _streaming_nns_kernel(limit_ref, q_ref, db_ref, keys_ref, counts_ref,
                           *, radius, shift, big, blocks_per_sb,
                           mask_ref=None, scan_ref=None):

@@ -6,7 +6,10 @@ in-flight NNS scan via the staged lookup/scan/rank steps, the threaded
 multi-tenant `ConcurrentFrontend` with bounded per-tenant queues and load
 shedding, and the `LiveCatalog` versioned embedding store: bounded delta
 shard + tombstones + epoch compaction over a read-only base, serving
-bit-identically to a from-scratch rebuild while the catalog churns).
+bit-identically to a from-scratch rebuild while the catalog churns, and
+the `TieredCatalog` frequency-tiered out-of-core store: memmapped base
+shard + int8 RAM pool + f32 hot cache, migrating rows between tiers at
+epoch compaction from measured lookup frequencies).
 
 Every front-end implements the one `Server` protocol (submit -> ticket,
 result(ticket), flush, close, stats) and is constructed through
@@ -46,6 +49,14 @@ from repro.serving.hot_cache import (
     cached_lookup,
     invalidate_rows,
     pin_rows,
+    top_ids_by_freq,
+)
+from repro.serving.tiered import (
+    BaseShard,
+    BaseShardWriter,
+    TieredCatalog,
+    open_base_shard,
+    write_base_shard,
 )
 from repro.serving.recsys_engine import (
     RecSysEngine,
@@ -64,6 +75,8 @@ __all__ = [
     "STATUS_OK",
     "STATUS_SHED",
     "AsyncServer",
+    "BaseShard",
+    "BaseShardWriter",
     "CacheStats",
     "ConcurrentFrontend",
     "DeltaFullError",
@@ -83,6 +96,7 @@ __all__ = [
     "ServerConfigError",
     "ServingError",
     "TicketTrace",
+    "TieredCatalog",
     "build_hot_cache",
     "cached_embedding_bag",
     "cached_lookup",
@@ -96,6 +110,7 @@ __all__ = [
     "lookup_step",
     "make_server",
     "materialize",
+    "open_base_shard",
     "pin_rows",
     "rank_stage_step",
     "rank_step",
@@ -103,4 +118,6 @@ __all__ = [
     "scan_step",
     "serve_step",
     "summarize_trace",
+    "top_ids_by_freq",
+    "write_base_shard",
 ]

@@ -178,6 +178,7 @@ class AsyncServer(MicroBatcher):
         scores = np.asarray(inf.scores)
         row = 0
         for chunk, bucket in inf.parts:
+            self._observe(chunk, items[row: row + bucket])
             for j, (ticket, _) in enumerate(chunk):
                 self._resolve(ticket, items[row + j], scores[row + j])
             row += bucket

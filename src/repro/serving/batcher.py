@@ -105,6 +105,12 @@ class MicroBatcher:
         self._closed = False
         # donated accumulator: hot-cache hits/lookups across every batch
         self._stats = CacheStats.zero()
+        # optional lookup-frequency hook (LiveCatalog.attach wires it to
+        # LiveCatalog.observe): called per served chunk with one flat int
+        # array of the item ids the batch looked up — history rows and the
+        # served candidates. Pure host-side telemetry; never affects
+        # serving results.
+        self.observer = None
         self._tenant_of: dict[int, int] = {}  # ticket -> submitting tenant
         self._per_tenant: dict[int, dict] = {}
         self.n_served = 0
@@ -180,11 +186,24 @@ class MicroBatcher:
                 self.engine, batch, self._stats)
             items = np.asarray(items)
             scores = np.asarray(top.scores)
+            self._observe(chunk, items)
             for row, (ticket, _) in enumerate(chunk):
                 self._resolve(ticket, items[row], scores[row])
             self.n_served += len(chunk)
             self.n_padded += bucket - len(chunk)
             self.n_batches += 1
+
+    def _observe(self, chunk, items) -> None:
+        """Feed the frequency observer one served chunk's item lookups:
+        the real (non-padding) queries' history ids plus the items served
+        back to them. Invalid (-1) ids are filtered by the observer."""
+        if self.observer is None or not len(chunk):
+            return
+        hist = np.concatenate(
+            [np.asarray(q["history"], np.int64).reshape(-1)
+             for _, q in chunk])
+        served = np.asarray(items[: len(chunk)], np.int64).reshape(-1)
+        self.observer(np.concatenate([hist, served]))
 
     def _resolve(self, ticket: int, items, scores) -> None:
         """Record one served ticket (+ its tenant accounting)."""

@@ -65,6 +65,7 @@ from repro.serving.hot_cache import (
     invalidate_rows,
     pin_rows,
     pool_rows,
+    top_ids_by_freq,
 )
 from repro.utils import pytree_dataclass
 
@@ -398,6 +399,37 @@ def rebuild_reference(engine):
         nns_mesh=None, nns_axis=None, nns_query_axis=None)
 
 
+def repin_hot_from_freqs(engine, freqs):
+    """Refill the item hot cache from measured lookup frequencies.
+
+    Pins the `capacity` most-looked-up alive base rows (ties broken by
+    ascending id — `top_ids_by_freq`, the one tier-selection order).
+    Pending delta ids are never pinned: the delta-resolution contract
+    requires delta ∩ hot = ∅, and their bytes live in the shard, not the
+    base table. Called after `compact()` (delta empty, every surviving row
+    in the new base) this restores hit rates that churn eviction decayed —
+    the previously open hot-cache-repinning item. Serving results are
+    unchanged by construction (the cache is bit-transparent); only the
+    hit counters move.
+    """
+    cache = engine.item_hot
+    if cache is None or not cache.capacity:
+        return engine
+    n = int(engine.item_table_q.shape[0])
+    f = np.zeros((n,), np.int64)
+    m = min(len(freqs), n)
+    f[:m] = np.asarray(freqs)[:m]
+    alive = (np.ones((n,), bool) if engine.item_mask is None
+             else np.asarray(engine.item_mask)[:n].copy())
+    if engine.delta is not None:
+        dids = np.asarray(engine.delta.ids)
+        dids = dids[dids != EMPTY_ID]
+        alive[dids[dids < n]] = False
+    ids = top_ids_by_freq(f, cache.capacity, eligible=alive)
+    return dataclasses.replace(
+        engine, item_hot=pin_rows(engine.item_table_q, ids, cache.capacity))
+
+
 # ---------------------------------------------------------------------------
 # the subsystem front door
 # ---------------------------------------------------------------------------
@@ -426,13 +458,41 @@ class LiveCatalog:
         self.n_compactions = 0
         self.last_compact_s = 0.0
         self._servers: list = []
+        # measured per-row lookup frequencies (serve-path observations):
+        # grown on demand past the base size as new ids are upserted
+        self.item_freqs = np.zeros(
+            (int(self.engine.item_table_q.shape[0]),), np.int64)
+        self.n_observed = 0
 
     # -- publication ---------------------------------------------------
     def attach(self, server) -> None:
         """Publish every future epoch/update swap to `server`
-        (a `MicroBatcher` / `AsyncServer`)."""
+        (a `MicroBatcher` / `AsyncServer`). Servers exposing an `observer`
+        hook also feed this catalog's per-row lookup-frequency counters
+        (every valid item id a served batch looked up — history rows and
+        served candidates alike), which `compact()` uses to repin the hot
+        cache."""
         self._servers.append(server)
+        if hasattr(server, "observer"):
+            server.observer = self.observe
         server.swap_engine(self.engine)
+
+    # -- frequency observation -----------------------------------------
+    def observe(self, ids) -> None:
+        """Count serve-path item lookups: `ids` is any int array of item
+        ids; negative (padding) and sentinel ids are ignored. Purely a
+        host-side counter — serving results never depend on it."""
+        ids = np.asarray(ids).reshape(-1)
+        ids = ids[(ids >= 0) & (ids < EMPTY_ID)]
+        if not ids.size:
+            return
+        hi = int(ids.max()) + 1
+        if hi > self.item_freqs.shape[0]:
+            grown = np.zeros((hi,), np.int64)
+            grown[: self.item_freqs.shape[0]] = self.item_freqs
+            self.item_freqs = grown
+        np.add.at(self.item_freqs, ids, 1)
+        self.n_observed += int(ids.size)
 
     def _publish(self) -> None:
         for server in self._servers:
@@ -474,6 +534,11 @@ class LiveCatalog:
         the previous epoch keep running on their own buffers)."""
         t0 = time.perf_counter()
         engine = compact_engine(self.engine)
+        if self.n_observed:
+            # tier migration rides the epoch fold: measured frequencies
+            # refill hot slots that churn eviction emptied (delta is empty
+            # here, so every surviving row is pinnable from the new base)
+            engine = repin_hot_from_freqs(engine, self.item_freqs)
         jax.block_until_ready((engine.item_table_q.values, engine.item_sigs))
         self.last_compact_s = time.perf_counter() - t0
         self.engine = engine

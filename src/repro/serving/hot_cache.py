@@ -66,6 +66,70 @@ class HotRowCache:
     capacity: int = 0
 
 
+def top_ids_by_freq(freqs, k: int, eligible=None) -> np.ndarray:
+    """Rank row ids by (frequency desc, id asc) and return the top `k`.
+
+    The secondary ascending-id key makes frequency ties deterministic —
+    `np.argpartition` tie order is implementation-defined and drifted
+    across numpy versions, which made the pinned hot set (and hence the
+    served cache counters) irreproducible. Every tier-selection site
+    (hot cache, int8 pool, compaction repinning) goes through this one
+    helper so they can never disagree on tie order.
+
+    eligible: optional (n,) bool mask; ineligible rows are excluded even
+    if fewer than `k` eligible rows exist (the result may be short).
+
+    Runs in O(chunk) temporary memory — a full-array lexsort allocates
+    several n-sized scratch arrays, which at the tiered catalog's 8M+
+    row counts is hundreds of MB against a residency budget of tens.
+    The chunked threshold select returns the EXACT lexsort answer: the
+    k-th-largest frequency `t` is found from per-chunk top-k value
+    pools, rows with freq > t (at most k of them) sort by
+    (freq desc, id asc), and the remaining slots fill with the smallest
+    ids at freq == t — `np.flatnonzero` per ascending chunk IS the
+    ascending-id tie order.
+    """
+    freqs = np.asarray(freqs, np.int64)
+    n = freqs.shape[0]
+    k = min(int(k), n)
+    if k <= 0:
+        return np.zeros((0,), np.int32)
+    elig = None if eligible is None else np.asarray(eligible, bool)
+    chunk = 1 << 20
+
+    def masked(lo, hi):
+        c = freqs[lo:hi]
+        if elig is None:
+            return c
+        return np.where(elig[lo:hi], c, np.int64(-1))
+
+    pool = []  # per-chunk top-k values: the global top-k lives in here
+    for lo in range(0, n, chunk):
+        c = masked(lo, min(lo + chunk, n))
+        m = c.shape[0]
+        # .copy(): the slice would otherwise pin the whole partitioned
+        # chunk (an O(chunk) array per iteration) in `pool`
+        pool.append(np.partition(c, m - k)[m - k:].copy() if m > k
+                    else np.array(c))
+    pool = np.concatenate(pool)
+    t = np.partition(pool, pool.shape[0] - k)[pool.shape[0] - k]
+
+    gt, eq, n_eq = [], [], 0
+    for lo in range(0, n, chunk):
+        c = masked(lo, min(lo + chunk, n))
+        gt.append(lo + np.flatnonzero(c > t))
+        if n_eq < k:  # chunks ascend in id, so the first k suffice
+            ids = lo + np.flatnonzero(c == t)
+            eq.append(ids)
+            n_eq += ids.shape[0]
+    gt = np.concatenate(gt)  # at most k rows are strictly above the k-th
+    order = np.lexsort((gt, -freqs[gt]))
+    top = np.concatenate([gt[order], np.concatenate(eq)[: k - gt.shape[0]]])
+    if elig is not None:
+        top = top[elig[top] & (freqs[top] >= 0)]
+    return top.astype(np.int32)
+
+
 def build_hot_cache(table: QuantizedTensor, freqs=None,
                     capacity: int = 256) -> HotRowCache:
     """Pin the `capacity` most frequent rows of `table`.
@@ -87,8 +151,7 @@ def build_hot_cache(table: QuantizedTensor, freqs=None,
     else:
         freqs = np.asarray(freqs)
         assert freqs.shape == (n,), (freqs.shape, n)
-        hot = np.sort(np.argpartition(-freqs, capacity - 1)[:capacity])
-        hot = hot.astype(np.int32)
+        hot = np.sort(top_ids_by_freq(freqs, capacity))
     hot_ids = jnp.asarray(hot)
     hot_rows = dequantize_rowwise(
         QuantizedTensor(values=table.values[hot_ids],

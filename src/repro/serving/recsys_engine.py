@@ -48,6 +48,7 @@ from repro.core.nns import (
     delta_scan,
     fixed_radius_nns,
     merge_delta_candidates,
+    query_parallel_delta_scan,
     query_parallel_nns,
     sharded_fixed_radius_nns,
 )
@@ -376,8 +377,18 @@ def _nns(engine: RecSysEngine, q_sigs: jax.Array) -> NNSResult:
                                 summary=summary, prune=prune)
     if engine.delta is None or engine.delta.capacity == 0:
         return base
-    pending = delta_scan(q_sigs, engine.delta.sigs, engine.delta.ids,
-                         engine.radius, engine.n_candidates)
+    if engine.nns_mesh is not None and engine.nns_query_axis is not None:
+        # mesh plans with a query axis: shard the (per-query independent)
+        # delta scan along it too — 1/P of the shard per device instead of
+        # every device scanning all of it replicated. Bank-only meshes keep
+        # the replicated scan (no query axis to split over).
+        pending = query_parallel_delta_scan(
+            engine.nns_mesh, engine.nns_query_axis, q_sigs,
+            engine.delta.sigs, engine.delta.ids, engine.radius,
+            engine.n_candidates)
+    else:
+        pending = delta_scan(q_sigs, engine.delta.sigs, engine.delta.ids,
+                             engine.radius, engine.n_candidates)
     return merge_delta_candidates(base, pending, engine.n_candidates)
 
 

@@ -68,6 +68,37 @@ def test_hot_cache_pins_most_frequent_rows(table):
     assert int(stats.hits) == 0 and int(stats.lookups) == 3
 
 
+def test_hot_cache_ties_break_by_ascending_id(table):
+    """Tied frequencies must pin deterministically: lowest id wins.
+
+    Regression: `build_hot_cache` used `argpartition`, whose order among
+    equal keys is implementation-defined — two processes (or two numpy
+    versions) could pin different hot sets for the same frequencies,
+    breaking cross-process bit-match of cache counters.
+    """
+    freqs = np.zeros(200)
+    freqs[[7, 42, 141, 190]] = 50  # four-way tie for 2 remaining slots
+    freqs[[5, 100]] = 99
+    cache = build_hot_cache(table, freqs=freqs, capacity=4)
+    np.testing.assert_array_equal(np.asarray(cache.hot_ids), [5, 7, 42, 100])
+    # all-zero frequencies: the full tie resolves to the lowest ids
+    cache = build_hot_cache(table, freqs=np.zeros(200), capacity=3)
+    np.testing.assert_array_equal(np.asarray(cache.hot_ids), [0, 1, 2])
+
+
+def test_top_ids_by_freq_order_and_eligibility():
+    from repro.serving import top_ids_by_freq
+
+    freqs = np.array([5, 9, 9, 1, 9, 0])
+    np.testing.assert_array_equal(top_ids_by_freq(freqs, 4), [1, 2, 4, 0])
+    # eligibility masks rows out entirely (result may come up short)
+    eligible = np.array([True, False, True, True, False, False])
+    np.testing.assert_array_equal(
+        top_ids_by_freq(freqs, 4, eligible=eligible), [2, 0, 3])
+    np.testing.assert_array_equal(
+        top_ids_by_freq(freqs, 2, eligible=np.zeros(6, bool)), [])
+
+
 def test_zero_capacity_cache_is_uncached_path(table, rng):
     cache = build_hot_cache(table, capacity=0)
     ids = jnp.asarray(rng.integers(-1, 200, size=(4, 7)), jnp.int32)

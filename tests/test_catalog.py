@@ -145,6 +145,72 @@ def test_empty_delta_merge_is_identity():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_query_parallel_delta_scan_matches_replicated():
+    """The query-sharded delta scan (size-1 mesh: exercises the shard_map
+    spec path without multi-device) bit-matches the replicated scan."""
+    from repro.core.nns import query_parallel_delta_scan
+
+    rng = np.random.default_rng(5)
+    qs = jnp.asarray(rng.integers(0, 2**32, (7, 8), dtype=np.uint32))
+    dsigs = jnp.asarray(rng.integers(0, 2**32, (32, 8), dtype=np.uint32))
+    dids = np.full(32, EMPTY_ID, np.int32)
+    dids[:10] = np.sort(rng.choice(500, 10, replace=False))
+    dids = jnp.asarray(dids)
+    mesh = jax.make_mesh((1,), ("qp",))
+    want = delta_scan(qs, dsigs, dids, 120, 16)
+    got = query_parallel_delta_scan(mesh, "qp", qs, dsigs, dids, 120, 16)
+    for name, a, b in zip(("indices", "distances", "counts"), want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+@pytest.mark.slow
+def test_query_parallel_delta_scan_two_devices_subprocess():
+    """Regression: the delta-shard scan used to run fully replicated on
+    query-sharded mesh plans (every device scanning every query). On 2
+    fake CPU devices the query-sharded scan — odd query count, so the pad
+    row is exercised — must bit-match the replicated path, and the
+    query-routed engine must serve identically to the local one under a
+    live delta."""
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.nns import (EMPTY_ID, delta_scan,
+                                    query_parallel_delta_scan)
+        rng = np.random.default_rng(0)
+        qs = jnp.asarray(rng.integers(0, 2**32, (5, 8), dtype=np.uint32))
+        dsigs = jnp.asarray(rng.integers(0, 2**32, (64, 8), dtype=np.uint32))
+        dids = np.full(64, EMPTY_ID, np.int32)
+        dids[:20] = np.sort(rng.choice(900, 20, replace=False))
+        dids = jnp.asarray(dids)
+        mesh = jax.make_mesh((2,), ("qp",))
+        want = delta_scan(qs, dsigs, dids, 110, 16)
+        got = query_parallel_delta_scan(mesh, "qp", qs, dsigs, dids, 110, 16)
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("MARKER delta qp ok", jax.device_count())
+    """)
+    import os
+    import pathlib
+
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=420, cwd=repo,
+        env={"PYTHONPATH": str(repo / "src"),
+             "HOME": os.environ.get("HOME", str(repo)),
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-3000:]
+    assert "MARKER delta qp ok 2" in out.stdout
+
+
 # ---------------------------------------------------------------------------
 # churn scenario matrix (engine-level bit-match vs rebuilt frozen engine)
 # ---------------------------------------------------------------------------

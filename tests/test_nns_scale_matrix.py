@@ -207,3 +207,58 @@ def test_streaming_equals_dense_beyond_old_scan_block_cap():
         np.asarray(dense.distances), np.asarray(stream.distances))
     np.testing.assert_array_equal(
         np.asarray(dense.counts), np.asarray(stream.counts))
+
+
+# ---------------------------------------------------------------------------
+# benchmark artifact row schema (benchmarks/bench_io.py)
+# ---------------------------------------------------------------------------
+def test_bench_row_schema_accepts_uniform_rows():
+    from benchmarks.bench_io import check_row_schema, csv_rows_to_json
+
+    rows = csv_rows_to_json([
+        ("nns_scale/streaming/n1024", 1.5, "qps=100.0;mem_lt_10pct_dense=True"),
+        ("nns_scale/streaming/n2048", 2.5, "qps=50.0;mem_lt_10pct_dense=False"),
+        ("nns_scale/dense/n4096", 0.0, "status=skipped_oom_guard;dense_bytes=1"),
+    ])
+    check_row_schema(rows, required=("qps",),
+                     within=("nns_scale/streaming/", "nns_scale/dense/"))
+
+
+def test_bench_row_schema_rejects_dropped_metric():
+    """The satellite-2 regression shape: one cell of a sweep silently
+    missing a metric its mates emit (mem_lt_10pct_dense used to appear on
+    the `streaming` path only) must fail the schema gate."""
+    from benchmarks.bench_io import check_row_schema, csv_rows_to_json
+
+    rows = csv_rows_to_json([
+        ("b/stream/n1", 1.0, "qps=9.0;mem_lt_10pct_dense=True"),
+        ("b/stream/n2", 1.0, "qps=8.0"),  # metric silently dropped
+    ])
+    with pytest.raises(ValueError, match="inconsistent derived schemas"):
+        check_row_schema(rows, within=("b/stream/",))
+    # failed cells are exempt from group consistency
+    rows[1]["derived"] = "status=failed"
+    check_row_schema(rows, within=("b/stream/",))
+
+
+def test_bench_row_schema_rejects_malformed_rows():
+    from benchmarks.bench_io import check_row_schema
+
+    with pytest.raises(ValueError, match="not key=value"):
+        check_row_schema([{"name": "x", "us_per_call": 1.0,
+                           "derived": "qps100"}])
+    with pytest.raises(ValueError, match="keys"):
+        check_row_schema([{"name": "x", "us_per_call": 1.0}])
+    with pytest.raises(ValueError, match="missing required"):
+        check_row_schema([{"name": "x", "us_per_call": 1.0,
+                           "derived": "qps=1.0"}], required=("rss_delta",))
+
+
+def test_nns_scale_rows_carry_memory_metric_on_all_streaming_cells():
+    """`_derived` + `_cell` row schema: the zipf cells emit the same
+    memory metric as the plain streaming cell (the fixed asymmetry)."""
+    from benchmarks.nns_scale import _derived
+
+    row = {"qps": 10.0, "rss_peak_delta_bytes": 5, "dense_matrix_bytes": 100,
+           "mem_lt_10pct_dense": True}
+    assert "mem_lt_10pct_dense=True" in _derived(row)

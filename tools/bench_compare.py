@@ -15,7 +15,8 @@ more than it. Every metric present on *both* sides of a row is judged:
 ``p99_ms=`` (tail latency, lower is better), ``blocks_touched=`` and
 ``scan_frac=`` (block-summary pruning effectiveness — lower is better;
 a pruned scan touching more of the catalog is a perf regression even
-when raw qps holds), plus the ``us_per_call`` column. Rows carry an
+when raw qps holds), ``resident_bytes=`` (tiered-catalog RAM residency,
+lower is better), plus the ``us_per_call`` column. Rows carry an
 ``ok=False`` style self-check in ``derived`` sometimes; those are the
 benchmark's own gates and are not re-judged here. Rows present on only
 one side are listed but never fail the diff (benchmarks grow cells over
@@ -47,6 +48,10 @@ _METRICS = (
     ("blocks_touched", re.compile(r"(?:^|;)blocks_touched=([0-9.eE+-]+)"),
      True),
     ("scan_frac", re.compile(r"(?:^|;)scan_frac=([0-9.eE+-]+)"), True),
+    # tiered-catalog residency: RAM bytes the serving tiers pin — growing
+    # it is a capacity regression even at equal qps
+    ("resident_bytes", re.compile(r"(?:^|;)resident_bytes=([0-9.eE+-]+)"),
+     True),
 )
 
 
