@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from repro.distributed.sharding import constrain
+from repro.models import recsys as rs
 from repro.models import transformer as tf
 from repro.optim import adamw
 from repro.optim.compression import compress_decompress, init_error_buffer
@@ -162,5 +163,48 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
                                step=state.step + 1, err_buf=new_err)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# RecSys filtering-model train step (the online-learning path)
+# ---------------------------------------------------------------------------
+def init_recsys_train_state(params: Any) -> TrainState:
+    """Optimizer state for the YoutubeDNN filtering model.
+
+    Reuses the LM `TrainState` container (params + AdamW state + step);
+    no error buffer — the filtering model's gradients are never
+    int8-compressed (they feed the quantize-at-ingestion catalog path,
+    which quantizes the *parameters*, not the gradients).
+    """
+    return TrainState(params=params, opt=adamw.init_adamw_state(params),
+                      step=jnp.zeros((), jnp.int32), err_buf=None)
+
+
+def make_recsys_train_step(cfg: rs.YoutubeDNNConfig, *, lr: float = 3e-3,
+                           weight_decay: float = 0.0
+                           ) -> Callable[[TrainState, dict],
+                                         tuple[TrainState, jax.Array]]:
+    """One jitted filtering-model gradient step: ``(state, batch) ->
+    (state', loss)``.
+
+    The exact training computation of ``benchmarks/accuracy_hr.py``
+    (full-softmax `recsys.filtering_loss` + AdamW at a flat lr) packaged
+    as a reusable step so `serving/online.py` trains *the same model the
+    engine was built from* — the train-while-serve bit-match contract
+    (live folds vs a cold rebuild of the current params) only holds when
+    online steps and the offline pretraining share one loss and update
+    rule. Batches come from `data.synthetic.movielens_batches`.
+    """
+
+    @jax.jit
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(
+            lambda p: rs.filtering_loss(p, cfg, batch))(state.params)
+        params, opt = adamw.adamw_update(grads, state.opt, state.params, lr,
+                                         weight_decay=weight_decay)
+        return TrainState(params=params, opt=opt, step=state.step + 1,
+                          err_buf=None), loss
 
     return train_step

@@ -9,7 +9,11 @@ shard + tombstones + epoch compaction over a read-only base, serving
 bit-identically to a from-scratch rebuild while the catalog churns, and
 the `TieredCatalog` frequency-tiered out-of-core store: memmapped base
 shard + int8 RAM pool + f32 hot cache, migrating rows between tiers at
-epoch compaction from measured lookup frequencies).
+epoch compaction from measured lookup frequencies, plus the
+train-while-serve pair: `OnlineTrainer` folding filtering-model gradient
+steps into the live catalog concurrently with serving, and the
+`ShadowHarness` freshness oracle asserting live quality tracks a cold
+rebuild of the current parameters).
 
 Every front-end implements the one `Server` protocol (submit -> ticket,
 result(ticket), flush, close, stats) and is constructed through
@@ -38,8 +42,15 @@ from repro.serving.catalog import (
     compact_engine,
     empty_delta,
     engine_apply_updates,
+    engine_refresh_model,
     materialize,
     rebuild_reference,
+)
+from repro.serving.online import OnlineTrainer
+from repro.serving.shadow import (
+    ShadowHarness,
+    ShadowRecord,
+    rebuild_from_params,
 )
 from repro.serving.hot_cache import (
     CacheStats,
@@ -86,12 +97,15 @@ __all__ = [
     "LoadGen",
     "LoadSummary",
     "MicroBatcher",
+    "OnlineTrainer",
     "QueueFullError",
     "RecSysEngine",
     "SchemaMismatchError",
     "ServeResult",
     "ServedQuery",
     "Server",
+    "ShadowHarness",
+    "ShadowRecord",
     "ServerClosedError",
     "ServerConfigError",
     "ServingError",
@@ -104,6 +118,7 @@ __all__ = [
     "default_buckets",
     "empty_delta",
     "engine_apply_updates",
+    "engine_refresh_model",
     "filter_step",
     "hit_rate",
     "invalidate_rows",
@@ -114,6 +129,7 @@ __all__ = [
     "pin_rows",
     "rank_stage_step",
     "rank_step",
+    "rebuild_from_params",
     "rebuild_reference",
     "scan_step",
     "serve_step",

@@ -290,6 +290,37 @@ def engine_apply_updates(engine, upsert_ids=None, upsert_rows=None,
         item_hot=invalidate_rows(engine.item_hot, np.asarray(touched)))
 
 
+def engine_refresh_model(engine, params):
+    """New engine serving the *current* model parameters (host-side).
+
+    The online-learning counterpart of `quantize_updates` for everything
+    that is NOT the item table: the filtering/ranking MLPs and the genre
+    table swap in directly, the user-feature ETs re-quantize with the
+    exact build-time transform, and every pinned UIET hot row is re-pinned
+    from its new quantized table (a stale pinned row would change served
+    bits vs a cold rebuild — the hot tier must stay bit-transparent).
+
+    Item rows are deliberately untouched: they flow through the delta
+    shard (`quantize_updates` via `LiveCatalog.upsert`), which is what
+    keeps the base epoch read-only and the MVCC swap atomic. The engine's
+    treedef and every leaf shape are preserved, so jitted serve steps
+    never retrace across a refresh.
+    """
+    tables_q = {k: quantize_rowwise(v) for k, v in params["tables"].items()}
+    uiet_hot = {}
+    for name, cache in engine.uiet_hot.items():
+        if cache is not None and cache.capacity:
+            ids = np.asarray(cache.hot_ids)
+            uiet_hot[name] = pin_rows(tables_q[name], ids[ids != EMPTY_ID],
+                                      cache.capacity)
+        else:
+            uiet_hot[name] = cache
+    return dataclasses.replace(
+        engine, params=params, tables_q=tables_q,
+        genre_table_q=quantize_rowwise(params["genre_table"]),
+        uiet_hot=uiet_hot)
+
+
 def materialize(engine):
     """Fold base + delta into one flat table (the \"final table\").
 
@@ -527,6 +558,15 @@ class LiveCatalog:
     def delete(self, ids) -> None:
         """Retire items: tombstoned out of retrieval immediately."""
         self.apply_updates(delete_ids=ids)
+
+    def refresh_model(self, params) -> None:
+        """Publish the current model parameters (MLPs, UIETs, genre table)
+        to every attached server — the dense-parameter half of online
+        learning (`engine_refresh_model`); item-embedding updates take the
+        `upsert` path instead. Atomic like every other publication: a new
+        engine value swaps in between drain chunks."""
+        self.engine = engine_refresh_model(self.engine, params)
+        self._publish()
 
     def compact(self) -> float:
         """Fold the delta into a new base epoch; returns the pause in

@@ -1,0 +1,173 @@
+"""Train-while-serve: filtering-model gradient steps feeding the live catalog.
+
+Every accuracy number so far was measured against a frozen table; RecSys
+tables churn with user behavior (the reason iMARS wants embeddings in the
+CMA fabric at all), so the serving stack needs a trainer that keeps the
+catalog fresh *while traffic is live*. `OnlineTrainer` closes that loop:
+
+  * **gradient steps** run the exact offline training computation
+    (`distributed.training.make_recsys_train_step`: full-softmax
+    `filtering_loss` + AdamW) on interaction batches;
+  * **embedding folds** diff the trainer's item table against the last
+    published snapshot and push only the changed rows through
+    `LiveCatalog.upsert` — i.e. the quantize-at-ingestion path
+    (`catalog.quantize_updates`), so a folded row is bit-identical to the
+    same row in a cold `RecSysEngine.build` of the current parameters;
+  * **dense refreshes** (`refresh_dense`) publish the MLPs / UIETs /
+    genre table through `catalog.engine_refresh_model` — same treedef,
+    same shapes, no retrace;
+  * every publication lands through `LiveCatalog._publish` ->
+    `server.swap_engine`, which on the concurrent front-end takes the
+    drain thread's `_serve_lock` — **updates serialize with serving
+    exactly the way epoch swaps do**: a drain chunk is always entirely
+    one engine value, and nothing an in-flight bucket references is ever
+    mutated.
+
+Staleness contract (measured, not assumed): each `step()` *lands* one
+update batch in trainer state at time t_step; the batch becomes *visible*
+to serving when a later `fold()` publishes it at t_fold. Per-batch
+staleness is ``t_fold - t_step``; `updates_landed` / `updates_visible`
+count the two sides, and `staleness_ms` records every folded batch's
+value so harnesses can plot staleness against update rate
+(`benchmarks/online_freshness.py`).
+
+The trainer is single-writer by design: call `step`/`fold`/
+`refresh_dense` from ONE thread (the training thread). Serving threads
+only ever read engine values that publications swapped in atomically.
+The correctness oracle lives in `serving/shadow.py`.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import training
+from repro.serving.catalog import LiveCatalog
+
+
+class OnlineTrainer:
+    """Filtering-model online learner over a `LiveCatalog`.
+
+    Args:
+      catalog: the live catalog whose attached servers receive every fold
+        and refresh (`LiveCatalog.attach` wires the publication path).
+      cfg: the `YoutubeDNNConfig` the catalog's engine was built with.
+      params: the current model parameters (the engine's build params —
+        online learning continues the deployed model, it does not restart
+        from scratch).
+      lr / weight_decay: AdamW knobs, defaulting to the offline recipe of
+        `benchmarks/accuracy_hr.py` so on/offline trajectories match.
+      fold_every: publish embedding updates every N steps (1 = every
+        step; 0 = only on explicit `fold()` calls). Larger cadences trade
+        staleness for fold overhead — the axis the freshness benchmark
+        sweeps.
+      compact_every: fold the delta into a new base epoch every N folds
+        (0 = never; the delta still auto-compacts when full). Keeps the
+        epoch machinery exercised *under* live training.
+    """
+
+    def __init__(self, catalog: LiveCatalog, cfg, params, *,
+                 lr: float = 3e-3, weight_decay: float = 0.0,
+                 fold_every: int = 1, compact_every: int = 0):
+        self.catalog = catalog
+        self.cfg = cfg
+        self.fold_every = int(fold_every)
+        self.compact_every = int(compact_every)
+        self.state = training.init_recsys_train_state(params)
+        self._train_step = training.make_recsys_train_step(
+            cfg, lr=lr, weight_decay=weight_decay)
+        # the last *published* item table (host f32): folds diff against
+        # it so only rows whose embedding actually moved ride the delta
+        self._last_folded = np.array(params["item_table"], np.float32)
+        self.steps_done = 0
+        self.n_folds = 0
+        self.rows_folded = 0
+        self.updates_visible = 0  # steps whose updates serving can see
+        self.staleness_ms: list[float] = []  # one entry per folded step
+        self._pending_t: list[float] = []  # t_step of not-yet-folded steps
+        self.last_loss = float("nan")
+
+    # -- introspection -------------------------------------------------
+    @property
+    def params(self):
+        """The trainer's current parameters (the cold-rebuild input)."""
+        return self.state.params
+
+    @property
+    def updates_landed(self) -> int:
+        """Update batches applied to trainer state (== steps taken)."""
+        return self.steps_done
+
+    @property
+    def updates_pending(self) -> int:
+        """Landed update batches not yet visible to serving."""
+        return self.steps_done - self.updates_visible
+
+    # -- the training loop ---------------------------------------------
+    def step(self, batch: dict) -> float:
+        """One gradient step on an interaction batch; folds on cadence.
+
+        Returns the batch loss. The step *lands* an update batch (its
+        embedding changes exist only in trainer state until the next
+        fold makes them serveable).
+        """
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        self.state, loss = self._train_step(self.state, b)
+        self.last_loss = float(loss)
+        self.steps_done += 1
+        self._pending_t.append(time.perf_counter())
+        if self.fold_every and self.steps_done % self.fold_every == 0:
+            self.fold()
+        return self.last_loss
+
+    def fold(self) -> int:
+        """Publish item-embedding changes since the last fold.
+
+        Diffs the trainer's item table against the last published
+        snapshot and upserts exactly the changed rows (quantized at
+        ingestion — `LiveCatalog.upsert`). Publication swaps the new
+        engine value into every attached server under its serve lock, so
+        the fold is atomic w.r.t. the drain thread. Returns the number of
+        rows folded; a fold with no pending change is a no-op (no upsert,
+        no publication).
+        """
+        table = np.asarray(self.state.params["item_table"], np.float32)
+        changed = np.nonzero((table != self._last_folded).any(axis=1))[0]
+        if changed.size:
+            self.catalog.upsert(changed.astype(np.int64), table[changed])
+            self._last_folded[changed] = table[changed]
+            self.rows_folded += int(changed.size)
+        now = time.perf_counter()
+        self.staleness_ms.extend((now - t) * 1e3 for t in self._pending_t)
+        self.updates_visible += len(self._pending_t)
+        self._pending_t.clear()
+        self.n_folds += 1
+        if self.compact_every and self.n_folds % self.compact_every == 0:
+            self.catalog.compact()
+        return int(changed.size)
+
+    def refresh_dense(self) -> None:
+        """Publish the current dense parameters (MLPs, UIETs, genre
+        table) to serving — `LiveCatalog.refresh_model`. After
+        ``fold(); refresh_dense()`` the live engine serves bit-for-bit
+        what a cold rebuild of `self.params` would serve (the
+        `serving.shadow` oracle asserts exactly this)."""
+        self.catalog.refresh_model(self.state.params)
+
+    def stats(self) -> dict:
+        """Host-side freshness counters (never affect served results)."""
+        lat = self.staleness_ms
+        return {
+            "steps": self.steps_done,
+            "folds": self.n_folds,
+            "rows_folded": self.rows_folded,
+            "updates_landed": self.updates_landed,
+            "updates_visible": self.updates_visible,
+            "updates_pending": self.updates_pending,
+            "staleness_ms_mean": float(np.mean(lat)) if lat else 0.0,
+            "staleness_ms_p95": float(np.percentile(lat, 95)) if lat
+            else 0.0,
+            "last_loss": self.last_loss,
+        }

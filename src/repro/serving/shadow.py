@@ -1,0 +1,182 @@
+"""Shadow serving: the freshness oracle for train-while-serve.
+
+The live path (`serving/online.py`) folds embedding updates into a
+serving engine incrementally — delta shard, tombstones, dense refreshes.
+The only trustworthy way to prove those mechanics never cost
+recommendation quality is to *shadow* them with the path that has no
+mechanics at all: a *cold rebuild* of the trainer's current parameters,
+quantized from scratch exactly like first deployment. This module holds
+both halves:
+
+  * `rebuild_from_params(engine, params)` — the params-level cold
+    oracle. Where `catalog.rebuild_reference` materializes the live
+    engine's *table*, this rebuilds from the *model*: every ET
+    re-quantizes with the build-time transform, signatures recompute over
+    the dequantized rows with the live engine's LSH projections, the
+    summary cold-builds, and the hot tiers re-pin the live engine's
+    pinned sets (bit-transparent either way). Same treedef and shapes as
+    the live engine, so jitted eval steps never recompile.
+  * `ShadowHarness` — replays one seeded eval stream (the dataset's
+    leave-one-out users) against the live engine and the cold rebuild at
+    every checkpoint, asserting HR@k tracks within `tol`, and snapshots
+    the trainer's staleness counters between checkpoints.
+
+Checkpoint contract: `checkpoint()` first makes every landed update
+visible (``trainer.fold(); trainer.refresh_dense()``) — the assertion
+then isolates the *serving-side incremental machinery* (delta overlay,
+tombstones, hot tiers, refresh) from training noise: live and shadow
+serve the same model, so any HR gap is a freshness-machinery bug, not an
+optimizer artifact. Between checkpoints the live path really is stale
+(that is the measured axis), so staleness rides along in each record.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lsh import lsh_signature
+from repro.core.nns import EMPTY_ID, build_block_summary
+from repro.core.quantization import dequantize_rowwise, quantize_rowwise
+from repro.serving.catalog import empty_delta
+from repro.serving.hot_cache import pin_rows
+from repro.serving.recsys_engine import filter_step, hit_rate
+
+
+def rebuild_from_params(engine, params):
+    """Frozen from-scratch engine over `params` with `engine`'s meta.
+
+    The cold-deployment image of the trainer's current model: item/user/
+    genre tables quantize row-wise from scratch, item signatures recompute
+    over the dequantized int8 rows with the SAME LSH projections as the
+    live engine, the block summary cold-builds, the delta is empty and
+    every base row alive. Hot caches pin the live engine's current pinned
+    ids over the fresh tables (the cache is bit-transparent; pinning the
+    same set keeps `CacheStats` comparable too). Unsharded, like
+    `catalog.rebuild_reference`.
+    """
+    item_q = quantize_rowwise(jnp.asarray(params["item_table"],
+                                          jnp.float32))
+    sigs = lsh_signature(dequantize_rowwise(item_q), engine.lsh_proj)
+    tables_q = {k: quantize_rowwise(v) for k, v in params["tables"].items()}
+    n = int(item_q.values.shape[0])
+
+    def repin(cache, table):
+        if cache is None or not cache.capacity:
+            return cache
+        ids = np.asarray(cache.hot_ids)
+        return pin_rows(table, ids[ids != EMPTY_ID], cache.capacity)
+
+    cap = engine.delta.capacity if engine.delta is not None else 0
+    words = int(np.asarray(sigs).shape[1])
+    br = (engine.block_summary.block_rows
+          if engine.block_summary is not None else None)
+    summary = (build_block_summary(np.asarray(sigs)) if br is None
+               else build_block_summary(np.asarray(sigs), br))
+    return dataclasses.replace(
+        engine, params=params, item_table_q=item_q, item_sigs=sigs,
+        tables_q=tables_q,
+        genre_table_q=quantize_rowwise(params["genre_table"]),
+        item_hot=repin(engine.item_hot, item_q),
+        uiet_hot={k: repin(c, tables_q[k])
+                  for k, c in engine.uiet_hot.items()},
+        item_mask=jnp.ones((n,), jnp.bool_),
+        block_summary=summary,
+        delta=empty_delta(cap, int(item_q.values.shape[1]), words),
+        nns_mesh=None, nns_axis=None, nns_query_axis=None)
+
+
+class ShadowRecord(NamedTuple):
+    """One shadow checkpoint: live vs cold-rebuilt quality + freshness."""
+
+    step: int  # trainer steps at eval time
+    hr_live: float  # HR@k of the continuously-updated live engine
+    hr_ref: float  # HR@k of the cold rebuild of the current params
+    gap: float  # abs(hr_live - hr_ref), asserted <= tol
+    agree_frac: float  # top-k retrieval agreement on the probe batch
+    staleness_ms: float  # mean staleness of steps folded since last eval
+    eval_s: float  # wall time of this checkpoint (both evals)
+
+
+class ShadowHarness:
+    """Replays a seeded eval stream against live and shadow engines.
+
+    Args:
+      trainer: the `OnlineTrainer` under test (its catalog's engine is
+        the live side; its params feed the cold rebuild).
+      data: the `MovieLensSynth` dataset — the seeded query stream and
+        leave-one-out labels (`recsys_engine.hit_rate` protocol).
+      k / mode: HR@k configuration (mode="lsh" is the iMARS path).
+      tol: max allowed ``abs(hr_live - hr_ref)`` per checkpoint.
+      max_users: cap the eval stream (None = every user).
+      probe_batch: users in the retrieval-agreement probe (0 disables).
+
+    `checkpoint()` raises `AssertionError` the moment the live path's
+    quality leaves the tolerance band — benchmarks run it in-line as a
+    hard gate, tests call it directly.
+    """
+
+    def __init__(self, trainer, data, *, k: int = 10, mode: str = "lsh",
+                 tol: float = 0.01, max_users: int | None = None,
+                 probe_batch: int = 256):
+        self.trainer = trainer
+        self.data = data
+        self.k = int(k)
+        self.mode = mode
+        self.tol = float(tol)
+        self.max_users = max_users
+        self.probe_batch = min(int(probe_batch), data.n_users)
+        self.records: list[ShadowRecord] = []
+        self._staleness_lo = 0  # trainer.staleness_ms cursor
+
+    def _probe_agreement(self, live, ref) -> float:
+        """Fraction of top-k retrieved ids both engines agree on, over
+        one fixed probe batch — the replayed-stream texture behind the
+        scalar HR (order-sensitive, position by position)."""
+        if not self.probe_batch:
+            return 1.0
+        idx = np.arange(self.probe_batch)
+        batch = {
+            **{kk: jnp.asarray(v[idx])
+               for kk, v in self.data.user_feats.items()},
+            "history": jnp.asarray(self.data.histories[idx]),
+            "genre": jnp.asarray(self.data.genres[idx]),
+        }
+        got = np.asarray(filter_step(live, batch)[0].indices[:, : self.k])
+        want = np.asarray(filter_step(ref, batch)[0].indices[:, : self.k])
+        return float((got == want).mean())
+
+    def checkpoint(self) -> ShadowRecord:
+        """Sync the live path, eval both sides, assert the gap, record.
+
+        Folds pending updates and refreshes dense params first — the
+        checkpoint compares *current model served incrementally* against
+        *current model served from a cold rebuild*.
+        """
+        t0 = time.perf_counter()
+        t = self.trainer
+        t.fold()
+        t.refresh_dense()
+        live = t.catalog.engine
+        ref = rebuild_from_params(live, t.params)
+        hr_live = hit_rate(live, self.data, k=self.k, mode=self.mode,
+                           max_users=self.max_users)
+        hr_ref = hit_rate(ref, self.data, k=self.k, mode=self.mode,
+                          max_users=self.max_users)
+        gap = abs(hr_live - hr_ref)
+        lat = t.staleness_ms[self._staleness_lo:]
+        self._staleness_lo = len(t.staleness_ms)
+        rec = ShadowRecord(
+            step=t.steps_done, hr_live=hr_live, hr_ref=hr_ref, gap=gap,
+            agree_frac=self._probe_agreement(live, ref),
+            staleness_ms=float(np.mean(lat)) if lat else 0.0,
+            eval_s=time.perf_counter() - t0)
+        self.records.append(rec)
+        assert gap <= self.tol, (
+            f"shadow checkpoint at step {t.steps_done}: live HR@{self.k} "
+            f"{hr_live:.4f} vs cold-rebuilt {hr_ref:.4f} — gap {gap:.4f} "
+            f"exceeds tol {self.tol}")
+        return rec

@@ -766,6 +766,68 @@ class TieredCatalog:
         self.item_freqs = freqs
         self.rebalance()
 
+    # -- persistence ---------------------------------------------------
+    def _sidecar_state(self) -> dict:
+        """The mutable state the epoch shard does NOT hold: the pending
+        delta shard, post-epoch tombstones, and the measured frequency
+        counters. (The base shard is already durable as ``epoch_N/``
+        files; pool and hot membership are pure functions of the counters
+        via `rebalance`, and the block summary of (sigs, alive), so both
+        are re-derived at restore rather than persisted.)"""
+        return {"delta": self.delta,
+                "alive": self.alive,
+                "item_freqs": self.item_freqs,
+                "n_observed": np.int64(self.n_observed)}
+
+    def snapshot(self, directory) -> None:
+        """Epoch-numbered snapshot of the sidecar state through the
+        fault-tolerant checkpointer (`checkpoint/checkpointer.py`):
+        pending delta rows + frequency counters, so a restored catalog
+        resumes with the hot-set ranking it had measured — not a cold
+        tier assignment that would have to re-learn the skew."""
+        from repro.checkpoint import checkpointer
+
+        checkpointer.save(directory, self.epoch, self._sidecar_state())
+
+    def restore(self, directory) -> None:
+        """Restore the latest committed sidecar snapshot into this
+        catalog and re-derive the tiers from the restored counters.
+
+        The snapshot's epoch must match the opened shard epoch (the base
+        bytes it was taken against); delta shapes are the structural
+        template, so `delta_capacity` must match the snapshotted one.
+        Pool and hot membership recompute via `rebalance()` — the one
+        tier-selection order (`top_ids_by_freq`) over bit-identical
+        counters reproduces the exact pre-snapshot ranking.
+        """
+        from repro.checkpoint import checkpointer
+
+        step = checkpointer.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed snapshot in {directory}")
+        if step != self.epoch:
+            raise ValueError(
+                f"snapshot epoch {step} does not match the opened shard "
+                f"epoch {self.epoch}; open the matching epoch_{step} "
+                f"shard first")
+        state = checkpointer.restore(directory, step,
+                                     self._sidecar_state())
+        self.delta = state["delta"]
+        self.alive = np.asarray(state["alive"], bool).copy()
+        self.item_freqs = np.asarray(state["item_freqs"], np.int64).copy()
+        self.n_observed = int(state["n_observed"])
+        # the summary is a pure function of (base sigs, alive): cold-build
+        # it against the restored tombstones (`update_block_summary`
+        # recomputes touched blocks exactly, so this bit-matches the
+        # incrementally-maintained one)
+        self.summary = build_block_summary(
+            np.asarray(self.base.sigs), SUMMARY_BLOCK_ROWS,
+            db_mask=self.alive)
+        # rebalance() re-derives pool + hot from the restored counters and
+        # already excludes pending delta ids, so delta ∩ caches = ∅ holds
+        # for the restored pending set too
+        self.rebalance()
+
     # -- introspection / oracles ----------------------------------------
     @property
     def n_pending(self) -> int:

@@ -1,0 +1,224 @@
+"""Train-while-serve: the OnlineTrainer fold/refresh machinery and the
+shadow-serving freshness oracle.
+
+The binding contract (serving/online.py + serving/shadow.py): after
+``fold(); refresh_dense()`` the continuously-updated live engine serves
+bit-for-bit what a cold rebuild of the trainer's current parameters would
+serve — folds ride the quantize-at-ingestion path, refreshes re-quantize
+the dense tables with the build-time transform — so the shadow HR gap is
+exactly zero at every checkpoint, and anything in between is *measured*
+staleness, not silent drift.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.data.synthetic import serving_queries as _queries
+from repro.models import recsys as rs
+from repro.serving import (
+    LiveCatalog,
+    MicroBatcher,
+    OnlineTrainer,
+    RecSysEngine,
+    ShadowHarness,
+    make_server,
+    rebuild_from_params,
+)
+
+
+@pytest.fixture(scope="module")
+def world():
+    data = synthetic.make_movielens(n_users=120, n_items=90, history_len=6)
+    cfg = rs.YoutubeDNNConfig(
+        n_items=data.n_items,
+        user_features={"user_id": data.n_users, "gender": 3, "age": 7,
+                       "occupation": 21, "zip_bucket": 250},
+        history_len=6)
+    params = rs.init_youtubednn(jax.random.key(0), cfg)
+    freqs = np.bincount(data.histories[data.histories >= 0],
+                        minlength=data.n_items)
+    engine = RecSysEngine.build(params, cfg, radius=112, n_candidates=16,
+                                top_k=5, hot_rows=32, item_freqs=freqs)
+    return engine, data, cfg, params
+
+
+def _trainer(world, **kw):
+    engine, data, cfg, params = world
+    cat = LiveCatalog(engine, delta_capacity=engine.cfg.n_items)
+    return OnlineTrainer(cat, cfg, params, **kw), data
+
+
+def _serve(engine, queries):
+    out = MicroBatcher(engine, max_batch=8).serve_many(queries)
+    return (np.stack([o.items for o in out]),
+            np.stack([o.scores for o in out]))
+
+
+def _batches(data, n, seed=1, batch=64):
+    return list(synthetic.movielens_batches(data, batch, n, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# the fold/refresh contract: live == cold rebuild, bit for bit
+# ---------------------------------------------------------------------------
+def test_fold_refresh_bitmatches_cold_rebuild(world):
+    trainer, data = _trainer(world, fold_every=0)
+    for b in _batches(data, 5):
+        trainer.step(b)
+    trainer.fold()
+    trainer.refresh_dense()
+    queries = list(_queries(data, np.arange(20) % 60))
+    live = _serve(trainer.catalog.engine, queries)
+    ref = _serve(rebuild_from_params(trainer.catalog.engine,
+                                     trainer.params), queries)
+    np.testing.assert_array_equal(live[0], ref[0])
+    np.testing.assert_array_equal(live[1], ref[1])
+    # ... and against the catalog's own table-level oracle
+    tbl = _serve(trainer.catalog.rebuild_reference(), queries)
+    np.testing.assert_array_equal(live[0], tbl[0])
+
+
+def test_shadow_checkpoint_gap_is_zero(world):
+    """The shadow gate doesn't just pass within tolerance — the fold and
+    refresh transforms are the exact build-time transforms, so live and
+    cold-rebuilt HR are IDENTICAL and the probe agreement is total."""
+    trainer, data = _trainer(world, fold_every=2)
+    shadow = ShadowHarness(trainer, data, k=5, tol=0.01, probe_batch=64)
+    for b in _batches(data, 6):
+        trainer.step(b)
+    rec = shadow.checkpoint()
+    assert rec.gap == 0.0
+    assert rec.agree_frac == 1.0
+    assert rec.hr_live == rec.hr_ref
+    assert shadow.records == [rec]
+    # a second checkpoint with no intervening steps still holds
+    assert shadow.checkpoint().gap == 0.0
+
+
+def test_shadow_detects_divergence_and_gates(world):
+    """A live engine that really diverges from the trainer's parameters
+    must be visible to the harness — and the tolerance check is a gate
+    (raises), not a logger."""
+    trainer, data = _trainer(world, fold_every=0)
+    for b in _batches(data, 3):
+        trainer.step(b)
+    trainer.fold()
+    trainer.refresh_dense()
+    # corrupt the live catalog behind the trainer's back: the next fold
+    # sees no trainer-side change, so serving stays wrong while the cold
+    # rebuild of the (honest) parameters does not
+    rng = np.random.default_rng(0)
+    d = trainer._last_folded.shape[1]
+    trainer.catalog.upsert(np.arange(30),
+                           rng.normal(size=(30, d)).astype(np.float32) * 5)
+    rec = ShadowHarness(trainer, data, k=5, tol=1.0,
+                        probe_batch=64).checkpoint()
+    assert rec.agree_frac < 1.0  # the probe sees the divergence
+    # the gate fires whenever the gap leaves the band (records first,
+    # then raises — the failing record is preserved for postmortems)
+    shadow = ShadowHarness(trainer, data, k=5, tol=-1.0, probe_batch=0)
+    with pytest.raises(AssertionError, match="exceeds tol"):
+        shadow.checkpoint()
+    assert len(shadow.records) == 1
+
+
+# ---------------------------------------------------------------------------
+# staleness accounting: landed vs visible is measured, not assumed
+# ---------------------------------------------------------------------------
+def test_staleness_counters(world):
+    trainer, data = _trainer(world, fold_every=0)
+    bs = _batches(data, 3)
+    for i, b in enumerate(bs):
+        trainer.step(b)
+        assert trainer.updates_landed == i + 1
+        assert trainer.updates_visible == 0
+        assert trainer.updates_pending == i + 1
+    assert trainer.staleness_ms == []
+    n = trainer.fold()
+    assert n > 0  # training moved embeddings
+    assert trainer.updates_visible == 3 and trainer.updates_pending == 0
+    assert len(trainer.staleness_ms) == 3
+    assert all(ms >= 0.0 for ms in trainer.staleness_ms)
+    # staleness is monotone in landing order: the first-landed batch
+    # waited longest
+    assert trainer.staleness_ms == sorted(trainer.staleness_ms,
+                                          reverse=True)
+    st = trainer.stats()
+    assert st["updates_landed"] == 3 and st["updates_pending"] == 0
+    assert st["staleness_ms_mean"] > 0.0
+
+
+def test_fold_cadence_and_noop(world):
+    trainer, data = _trainer(world, fold_every=2)
+    bs = _batches(data, 4)
+    trainer.step(bs[0])
+    assert trainer.n_folds == 0 and trainer.updates_pending == 1
+    trainer.step(bs[1])  # cadence hit: auto-fold
+    assert trainer.n_folds == 1 and trainer.updates_pending == 0
+    # a fold with nothing pending is a publication no-op
+    pending_before = trainer.catalog.n_pending
+    assert trainer.fold() == 0
+    assert trainer.catalog.n_pending == pending_before
+    trainer.step(bs[2])
+    trainer.step(bs[3])
+    assert trainer.n_folds == 3 and trainer.updates_visible == 4
+
+
+def test_refresh_preserves_treedef(world):
+    """Publications must never retrace jitted serve steps: fold and
+    refresh keep the engine's treedef and leaf shapes identical."""
+    trainer, data = _trainer(world, fold_every=1)
+    before = trainer.catalog.engine
+    want = jax.tree_util.tree_structure(before)
+    for b in _batches(data, 2):
+        trainer.step(b)
+    trainer.refresh_dense()
+    after = trainer.catalog.engine
+    assert jax.tree_util.tree_structure(after) == want
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+# ---------------------------------------------------------------------------
+# concurrent train-while-serve (the deployment shape)
+# ---------------------------------------------------------------------------
+def test_train_while_serve_concurrent_smoke(world):
+    """A paced training thread folds (and compacts) into the catalog
+    while the concurrent front-end serves: zero error tickets, every
+    publication lands under the serve lock, and the final shadow
+    checkpoint still shows a zero gap."""
+    engine, data, cfg, params = world
+    cat = LiveCatalog(engine, delta_capacity=engine.cfg.n_items)
+    server = make_server(cat.engine, "concurrent", max_batch=8,
+                         buckets=(8,), queue_depth=None)
+    cat.attach(server)
+    trainer = OnlineTrainer(cat, cfg, params, fold_every=1,
+                            compact_every=4)
+    bs = _batches(data, 12)
+    done = threading.Event()
+
+    def train():
+        for b in bs:
+            trainer.step(b)
+        done.set()
+
+    th = threading.Thread(target=train, daemon=True)
+    th.start()
+    served = []
+    while not done.is_set():
+        served.extend(server.serve_many(
+            list(_queries(data, np.arange(16) % 60))))
+    th.join()
+    served.extend(server.serve_many(
+        list(_queries(data, np.arange(16) % 60))))
+    assert served and all(s.status == "ok" for s in served)
+    assert server.stats()["n_errors"] == 0
+    assert trainer.n_folds == 12
+    assert cat.epoch >= 3  # compact_every=4 really compacted under load
+    rec = ShadowHarness(trainer, data, k=5, probe_batch=64).checkpoint()
+    assert rec.gap == 0.0 and rec.agree_frac == 1.0
+    server.close()

@@ -251,3 +251,82 @@ def test_tiered_compact_migration_with_live_traffic(served, tmp_path):
     # must be byte-resident
     top = int(np.argmax(cat.item_freqs[:90] * cat.alive[:90]))
     assert top in cat.pool_ids
+
+
+# ---------------------------------------------------------------------------
+# persistence: frequency counters + hot-set ranking survive restore
+# ---------------------------------------------------------------------------
+def test_snapshot_restore_preserves_freqs_and_ranking(served, tmp_path):
+    """The sidecar snapshot (delta + tombstones + measured frequencies)
+    restores across an epoch swap into a freshly-opened catalog: the
+    counters are bit-equal, the re-derived pool/hot ranking is the exact
+    pre-snapshot one (no re-learning the skew), and serving bit-matches —
+    delta overlay, tombstones, and summary included."""
+    engine, data, _ = served
+    rng = np.random.default_rng(6)
+    d = engine.item_table_q.shape[1]
+    shard_dir, snap_dir = tmp_path / "shard", tmp_path / "snap"
+    cat = TieredCatalog.from_engine(engine, str(shard_dir), pool_rows=24,
+                                    item_freqs=None, delta_capacity=8)
+    # measured traffic -> churn -> EPOCH SWAP -> more traffic + churn, so
+    # the snapshot carries post-swap counters, pending rows, and
+    # tombstones all at once
+    for step in range(3):
+        _assert_serves_match(
+            cat, _batch(engine, data, range(step * 12, step * 12 + 12)))
+    cat.upsert([1, 2, 92], _rows(rng, 3, d))
+    cat.delete([3])
+    cat.compact()
+    assert cat.epoch == 1
+    _assert_serves_match(cat, _batch(engine, data, range(12)))
+    cat.upsert([5, 94], _rows(rng, 2, d))
+    cat.delete([7])
+    cat.snapshot(snap_dir)
+
+    other = TieredCatalog.open(str(shard_dir), engine, pool_rows=24,
+                               delta_capacity=8)
+    assert not np.array_equal(other.item_freqs, cat.item_freqs)  # cold
+    other.restore(snap_dir)
+    np.testing.assert_array_equal(other.item_freqs, cat.item_freqs)
+    assert other.n_observed == cat.n_observed
+    np.testing.assert_array_equal(other.alive, cat.alive)
+    np.testing.assert_array_equal(np.asarray(other.delta.ids),
+                                  np.asarray(cat.delta.ids))
+    # the hot-set ranking is the exact pre-snapshot one. (Restore ends in
+    # `rebalance()`; the live side's pool has churn-evicted slots that
+    # only refill at its next rebalance — pure residency movement, so
+    # bring it to the same image before comparing membership.)
+    cat.rebalance()
+    np.testing.assert_array_equal(other.pool_ids, cat.pool_ids)
+    np.testing.assert_array_equal(np.asarray(other.inner.item_hot.hot_ids),
+                                  np.asarray(cat.inner.item_hot.hot_ids))
+    for f in ("or_sigs", "and_sigs", "min_pc", "max_pc", "n_alive"):
+        np.testing.assert_array_equal(np.asarray(getattr(other.summary, f)),
+                                      np.asarray(getattr(cat.summary, f)))
+    batch = _batch(engine, data, range(8, 20))
+    want, got = cat.serve(batch), other.serve(batch)
+    np.testing.assert_array_equal(np.asarray(want.items),
+                                  np.asarray(got.items))
+    np.testing.assert_array_equal(np.asarray(want.topk.scores),
+                                  np.asarray(got.topk.scores))
+    assert int(want.stats.hits) == int(got.stats.hits)
+
+
+def test_restore_guards(served, tmp_path):
+    """Restore refuses an empty snapshot dir and an epoch mismatch (the
+    sidecar is only valid against the base bytes it was taken over)."""
+    engine, data, _ = served
+    rng = np.random.default_rng(7)
+    d = engine.item_table_q.shape[1]
+    cat = TieredCatalog.from_engine(engine, str(tmp_path / "a"),
+                                    pool_rows=16, delta_capacity=8)
+    with pytest.raises(FileNotFoundError, match="no committed snapshot"):
+        cat.restore(tmp_path / "empty")
+    cat.upsert([1], _rows(rng, 1, d))
+    cat.compact()  # epoch 1
+    cat.snapshot(tmp_path / "snap")
+    fresh = TieredCatalog.from_engine(engine, str(tmp_path / "b"),
+                                      pool_rows=16, delta_capacity=8)
+    assert fresh.epoch == 0
+    with pytest.raises(ValueError, match="does not match the opened"):
+        fresh.restore(tmp_path / "snap")

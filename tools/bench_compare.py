@@ -16,7 +16,9 @@ more than it. Every metric present on *both* sides of a row is judged:
 ``scan_frac=`` (block-summary pruning effectiveness — lower is better;
 a pruned scan touching more of the catalog is a perf regression even
 when raw qps holds), ``resident_bytes=`` (tiered-catalog RAM residency,
-lower is better), plus the ``us_per_call`` column. Rows carry an
+lower is better), ``hr_at_10=`` (retrieval quality, higher is better),
+``staleness_ms=`` (online-learning update-visibility latency, lower is
+better), plus the ``us_per_call`` column. Rows carry an
 ``ok=False`` style self-check in ``derived`` sometimes; those are the
 benchmark's own gates and are not re-judged here. Rows present on only
 one side are listed but never fail the diff (benchmarks grow cells over
@@ -51,6 +53,11 @@ _METRICS = (
     # tiered-catalog residency: RAM bytes the serving tiers pin — growing
     # it is a capacity regression even at equal qps
     ("resident_bytes", re.compile(r"(?:^|;)resident_bytes=([0-9.eE+-]+)"),
+     True),
+    # online freshness: retrieval quality (a drop is the regression) and
+    # update-landed -> update-visible latency (a rise is the regression)
+    ("hr_at_10", re.compile(r"(?:^|;)hr_at_10=([0-9.eE+-]+)"), False),
+    ("staleness_ms", re.compile(r"(?:^|;)staleness_ms=([0-9.eE+-]+)"),
      True),
 )
 
