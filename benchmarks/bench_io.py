@@ -79,6 +79,38 @@ def parse_derived(derived: str) -> dict[str, str]:
     return out
 
 
+def check_telemetry_schema(telemetry: dict,
+                           required: tuple[str, ...] = ()) -> None:
+    """Validate an embedded telemetry snapshot; raises ValueError on drift.
+
+    Benchmarks embed `MetricsRegistry.snapshot()` as the top-level
+    ``telemetry`` key of BENCH_*.json (it rides ``**extra`` of
+    `write_bench_json` — a sibling of ``rows``, so `check_row_schema`
+    never sees it). The snapshot must be a flat dict of dotted lowercase
+    ``subsystem.metric`` keys whose values are JSON scalars or plain
+    dict/list structures, carrying at least the `required` keys.
+    """
+    problems = []
+    if not isinstance(telemetry, dict):
+        raise ValueError(f"telemetry must be a dict, got "
+                         f"{type(telemetry).__name__}")
+    for key, value in telemetry.items():
+        if not isinstance(key, str) or not key or key != key.lower() \
+                or "." not in key:
+            problems.append(f"key {key!r} is not dotted lowercase "
+                            f"subsystem.metric")
+        if not isinstance(value, (int, float, str, bool, dict, list,
+                                  type(None))):
+            problems.append(f"key {key!r}: value {value!r} is not "
+                            f"JSON-serializable")
+    missing = [k for k in required if k not in telemetry]
+    if missing:
+        problems.append(f"missing required keys {missing}")
+    if problems:
+        raise ValueError("telemetry-schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
 def check_row_schema(rows: list[dict], required: tuple[str, ...] = (),
                      *, within: tuple[str, ...] = ()) -> None:
     """Validate the shared csv-row shape; raises ValueError on drift.

@@ -64,8 +64,8 @@ def _measure_capacity(engine, pool, batch: int, repeats: int) -> float:
 
 def _run_load(engine, pool, *, rate, duration, tenants, queue_depth, batch,
               depth, zipf_a, burst, seed, repeats):
-    """One open-loop cell; returns (summary, replay, results) of the best
-    (lowest admitted p99) of `repeats` passes."""
+    """One open-loop cell; returns (summary, replay, results, telemetry
+    snapshot) of the best (lowest admitted p99) of `repeats` passes."""
     from repro.serving import LoadGen, make_server, summarize_trace
 
     best = None
@@ -84,12 +84,13 @@ def _run_load(engine, pool, *, rate, duration, tenants, queue_depth, batch,
         server.flush()
         trace = server.take_trace()
         results = {t: server.result(t) for (t, _, _) in replay}
+        snap = server.snapshot()
         server.close()
         summary = summarize_trace(trace, duration)
         key = summary.p99_ms if summary.p99_ms == summary.p99_ms else 1e12
         if best is None or key < best[0]:
-            best = (key, summary, replay, results)
-    return best[1], best[2], best[3]
+            best = (key, summary, replay, results, snap)
+    return best[1], best[2], best[3], best[4]
 
 
 def _assert_bitmatch(engine, pool, replay, results, batch: int) -> int:
@@ -121,6 +122,7 @@ def rows(args):
     from repro.data.synthetic import serving_queries
 
     out = []
+    telemetry = None
     for n_items in args.sizes:
         engine, data = _setup(n_items, args.scan_block or None)
         rng_pool = min(args.pool, data.n_users)
@@ -137,7 +139,7 @@ def rows(args):
 
         qps_at_slo, sweep = 0.0, []
         for i, frac in enumerate(args.loads):
-            summary, replay, results = _run_load(
+            summary, replay, results, telemetry = _run_load(
                 engine, pool, rate=frac * cap, duration=args.duration,
                 tenants=args.tenants, queue_depth=queue_depth,
                 batch=args.batch, depth=args.depth, zipf_a=args.zipf_a,
@@ -191,7 +193,7 @@ def rows(args):
                 f"errors={summary.error_frac:.3f}, accounted={accounted}")
         # the low-load end must bit-match too (shed-free path)
         _assert_bitmatch(engine, pool, sweep[0][2], sweep[0][3], args.batch)
-    return out
+    return out, telemetry
 
 
 def main():
@@ -243,11 +245,14 @@ def main():
         p, d, m = args.burst.split(",")
         args.burst = (float(p), float(d), float(m))
 
-    from benchmarks.bench_io import csv_rows_to_json, write_bench_json
+    from benchmarks.bench_io import (check_telemetry_schema,
+                                     csv_rows_to_json, write_bench_json)
 
-    out = rows(args)
+    out, telemetry = rows(args)
     for name, us, derived in out:
         print(f"{name},{us:.3f},{derived}")
+    check_telemetry_schema(telemetry, required=("serving.submitted",
+                                                "serving.per_tenant"))
     path = write_bench_json(
         "load_sweep", csv_rows_to_json(out), out_dir=args.out,
         config={"sizes": args.sizes, "batch": args.batch,
@@ -257,7 +262,8 @@ def main():
                 "burst": args.burst, "pool": args.pool,
                 "depth": args.depth, "scan_block": args.scan_block,
                 "seed": args.seed, "repeats": args.repeats,
-                "smoke": args.smoke})
+                "smoke": args.smoke},
+        telemetry=telemetry)
     print(f"# wrote {path}")
     return 0
 

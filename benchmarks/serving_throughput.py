@@ -52,9 +52,9 @@ def _setup(n_users=2000, n_items=1200, history_len=12, hot_rows=256):
 
 
 def _measure_qps(engine, data, batch: int, n_queries: int,
-                 repeats: int = 1) -> tuple[float, float]:
-    """(queries/sec, hit_rate) through the sync front-end at one bucket
-    size; best of `repeats` measured passes."""
+                 repeats: int = 1) -> tuple[float, float, dict]:
+    """(queries/sec, hit_rate, telemetry snapshot) through the sync
+    front-end at one bucket size; best of `repeats` measured passes."""
     rng = np.random.default_rng(0)
     server = make_server(engine, "sync", max_batch=batch, buckets=(batch,))
     # warmup: compile this bucket shape
@@ -67,16 +67,18 @@ def _measure_qps(engine, data, batch: int, n_queries: int,
         for lo in range(0, n_queries, batch):
             server.serve_many(queries[lo: lo + batch])
         best = max(best, n_queries / (time.perf_counter() - t0))
-    return best, server.stats()["cache_hit_rate"]
+    snap = server.snapshot()
+    return best, snap["cache.hits"] / max(snap["cache.lookups"], 1), snap
 
 
 def rows(batch_sizes=BATCH_SIZES, repeats: int = 1):
     engine, data, params, cfg, freqs = _setup()
     out = []
     qps = {}
+    telemetry = None
     for batch in batch_sizes:
         n = max(64, min(1024, batch * 4))
-        q, hit = _measure_qps(engine, data, batch, n, repeats)
+        q, hit, telemetry = _measure_qps(engine, data, batch, n, repeats)
         qps[batch] = q
         out.append((
             f"serving/throughput/batch{batch}", 1e6 / q,
@@ -92,12 +94,12 @@ def rows(batch_sizes=BATCH_SIZES, repeats: int = 1):
     for cap in CACHE_SIZES:
         eng = RecSysEngine.build(params, cfg, radius=112, n_candidates=50,
                                  top_k=10, hot_rows=cap, item_freqs=freqs)
-        _, hit = _measure_qps(eng, data, 64, 256)
+        _, hit, _ = _measure_qps(eng, data, 64, 256)
         out.append((
             f"serving/hot_cache/capacity{cap}", 0.0,
             f"hot_hit_rate={hit:.3f};items={data.n_items}",
         ))
-    return out
+    return out, telemetry
 
 
 def main():
@@ -112,15 +114,19 @@ def main():
     args = ap.parse_args()
     batch_sizes = tuple(int(s) for s in args.sizes.split(","))
 
-    from benchmarks.bench_io import csv_rows_to_json, write_bench_json
+    from benchmarks.bench_io import (check_telemetry_schema,
+                                     csv_rows_to_json, write_bench_json)
 
-    out = rows(batch_sizes, args.repeats)
+    out, telemetry = rows(batch_sizes, args.repeats)
     for name, us, derived in out:
         print(f"{name},{us:.6f},{derived}")
+    check_telemetry_schema(telemetry, required=("serving.served",
+                                                "cache.lookups"))
     path = write_bench_json(
         "serving_throughput", csv_rows_to_json(out), out_dir=args.out,
         config={"batch_sizes": batch_sizes, "cache_sizes": CACHE_SIZES,
-                "repeats": args.repeats})
+                "repeats": args.repeats},
+        telemetry=telemetry)
     print(f"# wrote {path}")
 
 

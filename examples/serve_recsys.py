@@ -20,13 +20,15 @@ Every front-end is constructed through the one factory —
 
   PYTHONPATH=src python examples/serve_recsys.py [--queries 2000]
       [--mode sync|pipelined|concurrent] [--depth 2]
-      [--prune on|off|auto] [--scan-block N]
+      [--prune on|off|auto] [--scan-block N] [--report]
 
 ``--prune`` drives the engine's block-summary pruning knob (`auto` prunes
 whenever the scan streams; results are bit-identical either way) and
 ``--scan-block`` forces the streaming plan — the demo catalog is small
 enough to route dense by default, where pruning never engages. The summary
 line reports the mean summary blocks touched per query on a sample batch.
+``--report`` prints the per-stage latency breakdown of the timed run from
+the front-end's ticket span chains (docs/OBSERVABILITY.md).
 """
 import argparse
 import time
@@ -60,6 +62,9 @@ def main():
                     help="streaming scan chunk (None routes by catalog "
                          "size; set e.g. 128 to stream the small demo "
                          "catalog so pruning engages)")
+    ap.add_argument("--report", action="store_true",
+                    help="print the per-stage latency breakdown of the "
+                         "timed run (from the ticket span chains)")
     args = ap.parse_args()
     if args.pipeline:
         args.mode = "pipelined"
@@ -97,9 +102,11 @@ def main():
         batcher.serve_many([make_query(i) for i in
                             rng.integers(0, data.n_users, size)])
     # reset batch counters so the report covers the timed run only (the
-    # concurrent front-end keeps its counters on the inner ring server)
+    # concurrent front-end keeps its counters on the inner ring server);
+    # draining the trace buffer drops the warmup tickets' span chains too
     counters = getattr(batcher, "_inner", batcher)
     counters.n_batches = counters.n_served = counters.n_padded = 0
+    batcher.take_trace()
 
     idx = rng.integers(0, data.n_users, args.queries)
     t0 = time.time()
@@ -125,6 +132,10 @@ def main():
           f"padding fraction {stats['padding_fraction']:.3f}, "
           f"hot-cache hit rate {stats['cache_hit_rate']:.3f}, "
           f"{prune_note}")
+    if args.report:
+        from tools.obs_report import render_breakdown, stage_breakdown
+        print("\n== per-stage breakdown (timed run) ==")
+        print(render_breakdown(stage_breakdown(batcher.take_trace())))
     batcher.close()
     e2e = cm.end_to_end_movielens(n_candidates=50)
     print(f"iMARS fabric model: {e2e['imars_qps']:.0f} qps/query-engine, "

@@ -34,6 +34,7 @@ from repro.serving.server import (
     ServerConfigError,
     ServingError,
     make_server,
+    stats_view,
 )
 from repro.serving.catalog import (
     DeltaFullError,
@@ -133,6 +134,7 @@ __all__ = [
     "rebuild_reference",
     "scan_step",
     "serve_step",
+    "stats_view",
     "summarize_trace",
     "top_ids_by_freq",
     "write_base_shard",

@@ -50,12 +50,14 @@ accumulator carry across the swap.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import NamedTuple, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.serving.batcher import MicroBatcher
 from repro.serving.server import ServerConfigError
 from repro.serving.recsys_engine import (
@@ -72,6 +74,9 @@ class _InFlight(NamedTuple):
     parts: tuple  # ((chunk, bucket), ...) — chunk = [(ticket, query), ...]
     items: object  # (sum(buckets), top_k) device future
     scores: object  # (sum(buckets), top_k) device future
+    blocks: object = None  # (sum(buckets),) blocks-touched future | None
+    t_bucket: float = 0.0  # host time the buckets were taken off the queue
+    t_dispatch: float = 0.0  # host time the staged pipeline was dispatched
 
 
 class AsyncServer(MicroBatcher):
@@ -99,8 +104,10 @@ class AsyncServer(MicroBatcher):
 
     def __init__(self, engine: RecSysEngine, *, max_batch: int = 256,
                  buckets: Sequence[int] | None = None, depth: int = 2,
-                 coalesce: int | None = None):
-        super().__init__(engine, max_batch=max_batch, buckets=buckets)
+                 coalesce: int | None = None, trace: bool = True,
+                 registry: MetricsRegistry | None = None):
+        super().__init__(engine, max_batch=max_batch, buckets=buckets,
+                         trace=trace, registry=registry)
         if depth < 1:
             raise ServerConfigError(f"ring depth must be >= 1, got {depth}")
         if coalesce is None:
@@ -155,6 +162,7 @@ class AsyncServer(MicroBatcher):
 
     def _dispatch(self, parts: list[tuple[list, int]]) -> _InFlight:
         """Stack `parts` into one batch and dispatch the staged pipeline."""
+        t_bucket = time.perf_counter() if self.trace else 0.0
         stacked = [self._stack_np([q for _, q in chunk], bucket)
                    for chunk, bucket in parts]
         host = (stacked[0] if len(stacked) == 1 else
@@ -169,13 +177,41 @@ class AsyncServer(MicroBatcher):
             self.n_served += len(chunk)
             self.n_padded += bucket - len(chunk)
             self.n_batches += 1
-        return _InFlight(parts=tuple(parts), items=items, scores=top.scores)
+        return _InFlight(parts=tuple(parts), items=items, scores=top.scores,
+                         blocks=getattr(nns, "blocks_touched", None),
+                         t_bucket=t_bucket,
+                         t_dispatch=(time.perf_counter() if self.trace
+                                     else 0.0))
 
     def _retire(self) -> None:
-        """Materialize the oldest in-flight bucket and fan out its results."""
+        """Materialize the oldest in-flight bucket and fan out its results.
+
+        Span semantics for the ring (docs/OBSERVABILITY.md): the device
+        futures retire *together* at the one host sync, so the ``scan``
+        boundary lands on the retirement and ``rank`` is ~0 — the whole
+        in-flight device wait shows up as dispatch -> scan. Observing the
+        real scan/rank edge would require an extra intermediate block,
+        which is exactly the serialization the ring exists to remove.
+        """
         inf = self._ring.popleft()
         items = np.asarray(inf.items)  # the one host sync per bucket
         scores = np.asarray(inf.scores)
+        if self.trace:
+            t_sync = time.perf_counter()
+            self.registry.observe("serving.stage.dispatch_s",
+                                  inf.t_dispatch - inf.t_bucket)
+            self.registry.observe("serving.stage.scan_s",
+                                  t_sync - inf.t_dispatch)
+            if inf.blocks is not None:
+                bt = np.asarray(inf.blocks)
+                self.registry.count("nns.blocks_touched", int(bt.sum()))
+                self.registry.count("nns.block_scan_queries", int(bt.size))
+            tail = (("bucket", inf.t_bucket),
+                    ("dispatch", inf.t_dispatch),
+                    ("scan", t_sync), ("rank", t_sync))
+            for chunk, _ in inf.parts:
+                for ticket, _ in chunk:
+                    self._spans.setdefault(ticket, []).extend(tail)
         row = 0
         for chunk, bucket in inf.parts:
             self._observe(chunk, items[row: row + bucket])
@@ -184,9 +220,9 @@ class AsyncServer(MicroBatcher):
             row += bucket
 
     # ------------------------------------------------------------------
-    def stats(self) -> dict:
-        """`MicroBatcher.stats()` + the ring knobs and occupancy."""
-        out = super().stats()
-        out.update(depth=self.depth, coalesce=self.coalesce,
-                   in_flight=self.in_flight)
-        return out
+    def _collect(self, reg: MetricsRegistry) -> None:
+        """`MicroBatcher._collect` + the ring knobs and occupancy."""
+        super()._collect(reg)
+        reg.gauge("serving.ring_depth", self.depth)
+        reg.gauge("serving.coalesce", self.coalesce)
+        reg.gauge("serving.in_flight", self.in_flight)

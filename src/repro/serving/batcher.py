@@ -28,23 +28,40 @@ ids and lean on the `valid` mask alone to keep the counters honest).
 The hot-cache hit accumulator is donated to the jitted step (`serve_step`'s
 third argument), so the counters update in place across batches without a
 host round-trip per flush.
+
+Telemetry (docs/OBSERVABILITY.md): with ``trace=True`` (the default)
+every ticket carries a stage-span chain (submit -> admit -> bucket ->
+dispatch -> scan -> rank -> resolve, `repro.obs.tracing.STAGES`) on its
+`ServedQuery.stages` and on the `TicketTrace` records `take_trace()`
+hands back; the per-server `MetricsRegistry` accumulates ticket-latency
+and per-stage histograms plus pruned-scan block counts, and `stats()` is
+a compatibility view over `snapshot()` (`server.stats_view`). The whole
+layer is overhead-gated in benchmarks/obs_overhead.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Sequence
 
 import jax
 import numpy as np
 
+from repro.obs import MetricsRegistry, TicketTrace
 from repro.serving.hot_cache import CacheStats
-from repro.serving.recsys_engine import RecSysEngine, serve_step
+from repro.serving.recsys_engine import RecSysEngine, n_summary_blocks, \
+    serve_step
 from repro.serving.server import (
     STATUS_OK,
     SchemaMismatchError,
     ServerClosedError,
     ServerConfigError,
+    stats_view,
 )
+
+# tickets traced beyond this are dropped (counted in `serving.trace_dropped`)
+# rather than growing the trace list without bound between take_trace calls
+TRACE_CAP = 100_000
 
 
 def default_buckets(max_batch: int) -> tuple[int, ...]:
@@ -71,6 +88,7 @@ class ServedQuery:
     scores: np.ndarray  # (top_k,) CTR scores
     status: str = STATUS_OK  # "ok" | "shed" | "error"
     tenant: int = 0  # submitting tenant (0 for single-tenant front-ends)
+    stages: tuple = ()  # stage-span chain (obs.tracing.STAGES); () untraced
 
     @property
     def ok(self) -> bool:
@@ -90,7 +108,8 @@ class MicroBatcher:
     mode = "sync"
 
     def __init__(self, engine: RecSysEngine, *, max_batch: int = 256,
-                 buckets: Sequence[int] | None = None):
+                 buckets: Sequence[int] | None = None, trace: bool = True,
+                 registry: MetricsRegistry | None = None):
         self.engine = engine
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets or default_buckets(max_batch)))
@@ -116,6 +135,14 @@ class MicroBatcher:
         self.n_served = 0
         self.n_padded = 0
         self.n_batches = 0
+        # telemetry: stage spans per open ticket + completed-ticket trace
+        self.trace = bool(trace)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.registry.register_collector(self._collect)
+        self._spans: dict[int, list] = {}
+        self._trace: list[TicketTrace] = []
+        self.n_trace_dropped = 0
 
     # ------------------------------------------------------------------
     def swap_engine(self, engine: RecSysEngine) -> None:
@@ -152,6 +179,11 @@ class MicroBatcher:
         t = self._per_tenant.setdefault(tenant, {"submitted": 0, "served": 0,
                                                  "shed": 0, "errors": 0})
         t["submitted"] += 1
+        if self.trace:
+            # the synchronous front-ends admit unconditionally: the admit
+            # boundary coincides with submit (no queue to shed from)
+            now = time.perf_counter()
+            self._spans[ticket] = [("submit", now), ("admit", now)]
         return ticket
 
     def result(self, ticket: int, *,
@@ -176,16 +208,41 @@ class MicroBatcher:
 
     # ------------------------------------------------------------------
     def flush(self) -> None:
-        """Drain the queue through bucket-shaped jitted serve steps."""
+        """Drain the queue through bucket-shaped jitted serve steps.
+
+        With tracing on, the synchronous path observes the *real* device
+        stage boundaries: an intermediate block on the NNS result marks
+        the scan->rank edge (free here — this path blocks on the ranked
+        items immediately after anyway), and pruned scans feed their
+        blocks-touched counts into the registry.
+        """
         while self._pending:
             chunk = self._pending[: self.max_batch]
             self._pending = self._pending[self.max_batch:]
             bucket = next(b for b in self.buckets if b >= len(chunk))
+            t_bucket = time.perf_counter() if self.trace else 0.0
             batch = self._stack([q for _, q in chunk], bucket)
-            items, top, _, self._stats = serve_step(
+            items, top, nns, self._stats = serve_step(
                 self.engine, batch, self._stats)
+            if self.trace:
+                t_dispatch = time.perf_counter()
+                jax.block_until_ready(nns.indices)
+                t_scan = time.perf_counter()
             items = np.asarray(items)
             scores = np.asarray(top.scores)
+            if self.trace:
+                t_rank = time.perf_counter()
+                self._meter_scan(nns)
+                self.registry.observe("serving.stage.dispatch_s",
+                                      t_dispatch - t_bucket)
+                self.registry.observe("serving.stage.scan_s",
+                                      t_scan - t_dispatch)
+                self.registry.observe("serving.stage.rank_s",
+                                      t_rank - t_scan)
+                tail = (("bucket", t_bucket), ("dispatch", t_dispatch),
+                        ("scan", t_scan), ("rank", t_rank))
+                for ticket, _ in chunk:
+                    self._spans.setdefault(ticket, []).extend(tail)
             self._observe(chunk, items)
             for row, (ticket, _) in enumerate(chunk):
                 self._resolve(ticket, items[row], scores[row])
@@ -206,11 +263,53 @@ class MicroBatcher:
         self.observer(np.concatenate([hist, served]))
 
     def _resolve(self, ticket: int, items, scores) -> None:
-        """Record one served ticket (+ its tenant accounting)."""
+        """Record one served ticket (+ its tenant accounting + spans)."""
         tenant = self._tenant_of.pop(ticket, 0)
+        stages = self._close_span(ticket, tenant, STATUS_OK)
         self._results[ticket] = ServedQuery(items=items, scores=scores,
-                                            tenant=tenant)
+                                            tenant=tenant, stages=stages)
         self._per_tenant[tenant]["served"] += 1
+
+    def _close_span(self, ticket: int, tenant: int, status: str) -> tuple:
+        """Stamp the resolve boundary, record the `TicketTrace`, and feed
+        the latency histograms; returns the finished span chain."""
+        if not self.trace:
+            return ()
+        span = self._spans.pop(ticket, None)
+        if not span:
+            return ()
+        t_res = time.perf_counter()
+        span.append(("resolve", t_res))
+        stages = tuple(span)
+        t_sub = span[0][1]
+        self._record_trace(
+            TicketTrace(ticket, tenant, t_sub, t_res, status, stages))
+        self.registry.observe("serving.ticket_latency_s", t_res - t_sub)
+        return stages
+
+    def _record_trace(self, rec: TicketTrace) -> None:
+        if len(self._trace) >= TRACE_CAP:
+            self.n_trace_dropped += 1
+            return
+        self._trace.append(rec)
+
+    def take_trace(self) -> list[TicketTrace]:
+        """Return and clear the completed-ticket trace (load harness /
+        `tools/obs_report.py`); every record carries its span chain when
+        the server was built with ``trace=True``."""
+        out, self._trace = self._trace, []
+        return out
+
+    def _meter_scan(self, nns) -> None:
+        """Accumulate pruned-scan effectiveness counters (blocks touched
+        per query vs the catalog's summary blocks -> scan_frac). Called
+        after the ranked items are materialized, so reading the tiny
+        per-query counts never stalls the pipeline."""
+        bt = getattr(nns, "blocks_touched", None)
+        if bt is not None:
+            bt = np.asarray(bt)
+            self.registry.count("nns.blocks_touched", int(bt.sum()))
+            self.registry.count("nns.block_scan_queries", int(bt.size))
 
     def _stack_np(self, queries: list[dict], bucket: int) -> dict:
         """Stack per-user queries into one padded (bucket, ...) host batch.
@@ -252,22 +351,33 @@ class MicroBatcher:
             self.flush()
             self._closed = True
 
+    def _collect(self, reg: MetricsRegistry) -> None:
+        """Snapshot-time collector: publish the plain-int serving counters
+        as registry gauges/info (the hot path never touches the registry
+        for these — see docs/OBSERVABILITY.md's overhead contract)."""
+        cache = self._stats.as_dict()
+        reg.info("serving.mode", self.mode)
+        reg.info("serving.closed", self._closed)
+        reg.gauge("serving.submitted", self._next_ticket)
+        reg.gauge("serving.served", self.n_served)
+        reg.gauge("serving.shed", 0)
+        reg.gauge("serving.errors", 0)
+        reg.gauge("serving.pending", len(self._pending))
+        reg.gauge("serving.padded", self.n_padded)
+        reg.gauge("serving.batches", self.n_batches)
+        reg.gauge("serving.trace_dropped", self.n_trace_dropped)
+        reg.gauge("cache.hits", cache["hits"])
+        reg.gauge("cache.lookups", cache["lookups"])
+        reg.gauge("nns.summary_blocks", n_summary_blocks(self.engine))
+        reg.info("serving.per_tenant",
+                 {t: dict(v) for t, v in self._per_tenant.items()})
+
+    def snapshot(self) -> dict:
+        """The full telemetry snapshot (`MetricsRegistry.snapshot`):
+        merged counters + collector gauges + histogram summaries."""
+        return self.registry.snapshot()
+
     def stats(self) -> dict:
-        """The unified `Server` stats schema (see docs/SERVING.md)."""
-        total = self.n_served + self.n_padded
-        return {
-            "mode": self.mode,
-            "closed": self._closed,
-            "n_submitted": self._next_ticket,
-            "n_served": self.n_served,
-            "n_shed": 0,
-            "n_errors": 0,
-            "n_pending": len(self._pending),
-            "n_padded": self.n_padded,
-            "n_batches": self.n_batches,
-            "padding_fraction": self.n_padded / total if total else 0.0,
-            "cache_hits": int(self._stats.hits),
-            "cache_lookups": int(self._stats.lookups),
-            "cache_hit_rate": self._stats.hit_rate(),
-            "per_tenant": {t: dict(v) for t, v in self._per_tenant.items()},
-        }
+        """The unified `Server` stats schema (see docs/SERVING.md) — a
+        compatibility view over `snapshot()` (`server.stats_view`)."""
+        return stats_view(self.snapshot())

@@ -480,7 +480,7 @@ class LiveCatalog:
     """
 
     def __init__(self, engine, *, delta_capacity: int = 1024,
-                 auto_compact: bool = True):
+                 auto_compact: bool = True, registry=None):
         self.engine = ensure_live(engine, delta_capacity)
         self.epoch = 0
         self.auto_compact = auto_compact
@@ -494,6 +494,29 @@ class LiveCatalog:
         self.item_freqs = np.zeros(
             (int(self.engine.item_table_q.shape[0]),), np.int64)
         self.n_observed = 0
+        # telemetry sink (repro.obs.MetricsRegistry); when None, `attach`
+        # adopts the first attached server's registry so one snapshot
+        # covers serving + catalog
+        self.registry = None
+        if registry is not None:
+            self._set_registry(registry)
+
+    def _set_registry(self, registry) -> None:
+        if self.registry is None and registry is not None:
+            self.registry = registry
+            registry.register_collector(self._collect)
+
+    def _collect(self, reg) -> None:
+        """Snapshot-time collector: catalog lifecycle counters + the
+        delta-overlay occupancy, as `catalog.*` gauges."""
+        reg.gauge("catalog.epoch", self.epoch)
+        reg.gauge("catalog.upserts", self.n_upserts)
+        reg.gauge("catalog.deletes", self.n_deletes)
+        reg.gauge("catalog.compactions", self.n_compactions)
+        reg.gauge("catalog.delta_pending", self.n_pending)
+        reg.gauge("catalog.delta_capacity", self.delta_capacity)
+        reg.gauge("catalog.observed_lookups", self.n_observed)
+        reg.gauge("catalog.last_compact_s", self.last_compact_s)
 
     # -- publication ---------------------------------------------------
     def attach(self, server) -> None:
@@ -502,10 +525,13 @@ class LiveCatalog:
         hook also feed this catalog's per-row lookup-frequency counters
         (every valid item id a served batch looked up — history rows and
         served candidates alike), which `compact()` uses to repin the hot
-        cache."""
+        cache. A catalog built without a registry adopts the first
+        attached server's, so its `catalog.*` gauges and compaction
+        events ride the server's `snapshot()`."""
         self._servers.append(server)
         if hasattr(server, "observer"):
             server.observer = self.observe
+        self._set_registry(getattr(server, "registry", None))
         server.swap_engine(self.engine)
 
     # -- frequency observation -----------------------------------------
@@ -526,6 +552,9 @@ class LiveCatalog:
         self.n_observed += int(ids.size)
 
     def _publish(self) -> None:
+        if self.registry is not None:
+            self.registry.event("publish", epoch=self.epoch,
+                                delta_pending=self.n_pending)
         for server in self._servers:
             server.swap_engine(self.engine)
 
@@ -584,6 +613,12 @@ class LiveCatalog:
         self.engine = engine
         self.epoch += 1
         self.n_compactions += 1
+        if self.registry is not None:
+            self.registry.observe("catalog.compact_pause_s",
+                                  self.last_compact_s)
+            self.registry.event("compact", epoch=self.epoch,
+                                pause_s=self.last_compact_s,
+                                n_items=self.n_items)
         self._publish()
         return self.last_compact_s
 

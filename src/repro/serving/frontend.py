@@ -33,9 +33,13 @@ threading, interleaving, and shedding move *time and admission*, never
 the bits of an admitted result.
 
 Open-loop measurement hooks: every ticket is timestamped at submit and at
-resolve; `take_trace()` hands the (ticket, tenant, submit_s, done_s,
-status) records to the load harness (`serving/load_gen.py`), which turns
-them into per-tenant p50/p99 latency and shed accounting.
+resolve; `take_trace()` hands `repro.obs.TicketTrace` records — (ticket,
+tenant, submit_s, done_s, status, stages) — to the load harness
+(`serving/load_gen.py`), which turns them into per-tenant p50/p99 latency
+and shed accounting. With ``trace=True`` every record (including shed and
+error tickets) carries a stage-span chain: the outer submit/admit stamps,
+the inner ring's bucket/dispatch/scan/rank stamps, and the outer resolve
+— so queue wait shows up as the admit -> bucket gap (docs/OBSERVABILITY.md).
 """
 from __future__ import annotations
 
@@ -43,12 +47,13 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import NamedTuple, Sequence
+from typing import Sequence
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, TicketTrace
 from repro.serving.async_server import AsyncServer
-from repro.serving.batcher import ServedQuery
+from repro.serving.batcher import TRACE_CAP, ServedQuery
 from repro.serving.recsys_engine import RecSysEngine
 from repro.serving.server import (
     STATUS_ERROR,
@@ -58,21 +63,12 @@ from repro.serving.server import (
     ServerClosedError,
     ServerConfigError,
     ServingError,
+    stats_view,
 )
 
-
-class TicketTrace(NamedTuple):
-    """One completed ticket's lifecycle, for the open-loop load harness."""
-
-    ticket: int
-    tenant: int
-    submit_s: float  # time.perf_counter() at admission
-    done_s: float  # time.perf_counter() at resolution (== submit_s if shed)
-    status: str  # "ok" | "shed" | "error"
-
-    @property
-    def latency_s(self) -> float:
-        return self.done_s - self.submit_s
+# the stages of an inner span chain the outer ticket inherits (the inner
+# submit/admit/resolve stamps are replaced by the outer ticket's own)
+_INNER_STAGES = frozenset(("bucket", "dispatch", "scan", "rank"))
 
 
 class ConcurrentFrontend:
@@ -94,6 +90,9 @@ class ConcurrentFrontend:
         instead of resolving the ticket as shed (closed-loop callers).
       autostart: start the drain thread at construction (tests pass
         False to stage deterministic overloads, then call `start()`).
+      trace / registry: stage-span tracing + the shared telemetry
+        registry (repro.obs); the inner ring shares the registry, so one
+        `snapshot()` covers the whole front-end.
     """
 
     mode = "concurrent"
@@ -102,15 +101,24 @@ class ConcurrentFrontend:
                  queue_depth: int | None = 256, max_batch: int = 256,
                  buckets: Sequence[int] | None = None, depth: int = 2,
                  coalesce: int | None = None, drain_chunk: int | None = None,
-                 shed: bool = True, autostart: bool = True):
+                 shed: bool = True, autostart: bool = True,
+                 trace: bool = True,
+                 registry: MetricsRegistry | None = None):
         if tenants < 1:
             raise ServerConfigError(f"tenants must be >= 1, got {tenants}")
         if queue_depth is not None and queue_depth < 1:
             raise ServerConfigError(
                 f"queue_depth must be >= 1 or None, got {queue_depth}")
+        self.trace = bool(trace)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
         self._inner = AsyncServer(engine, max_batch=max_batch,
                                   buckets=buckets, depth=depth,
-                                  coalesce=coalesce)
+                                  coalesce=coalesce, trace=trace,
+                                  registry=self.registry)
+        # registered after the inner collector, so the outer view of the
+        # shared gauges (submitted/shed/errors/pending/per_tenant) wins
+        self.registry.register_collector(self._collect)
         self.tenants = tuple(range(tenants))
         self.queue_depth = queue_depth
         self.shed = shed
@@ -128,6 +136,7 @@ class ConcurrentFrontend:
         self._results: dict[int, ServedQuery] = {}
         self._outstanding: set[int] = set()
         self._trace: list[TicketTrace] = []
+        self.n_trace_dropped = 0
         self._next_ticket = 0
         self._n_inflight = 0  # collected from queues, not yet resolved
         self._rr = 0  # round-robin start tenant for the next collect
@@ -168,20 +177,33 @@ class ConcurrentFrontend:
                     raise QueueFullError(
                         f"tenant {tenant} queue at depth {len(q)}")
                 self._per_tenant[tenant]["shed"] += 1
-                self._results[ticket] = self._sentinel(tenant, STATUS_SHED)
-                self._trace.append(
-                    TicketTrace(ticket, tenant, now, now, STATUS_SHED))
+                stages = ((("submit", now), ("admit", now),
+                           ("resolve", now)) if self.trace else ())
+                self._results[ticket] = self._sentinel(
+                    tenant, STATUS_SHED, stages)
+                self._record_trace(TicketTrace(ticket, tenant, now, now,
+                                               STATUS_SHED, stages))
                 self._cv.notify_all()
                 return ticket
             q.append((ticket, tenant, query, now))
             self._cv.notify_all()  # wake the drain thread
             return ticket
 
-    def _sentinel(self, tenant: int, status: str) -> ServedQuery:
+    def _sentinel(self, tenant: int, status: str,
+                  stages: tuple = ()) -> ServedQuery:
         k = self._inner.engine.top_k
         return ServedQuery(items=np.full(k, -1, np.int32),
                            scores=np.zeros(k, np.float32),
-                           status=status, tenant=tenant)
+                           status=status, tenant=tenant, stages=stages)
+
+    def _record_trace(self, rec: TicketTrace) -> None:
+        """Append under `_cv` (held by every caller); capped like the
+        single-tenant front-ends so an unharvested trace can't grow
+        without bound between `take_trace()` calls."""
+        if len(self._trace) >= TRACE_CAP:
+            self.n_trace_dropped += 1
+            return
+        self._trace.append(rec)
 
     # ------------------------------------------------------------------
     # redemption / draining
@@ -282,6 +304,10 @@ class ConcurrentFrontend:
                                for (_, _, q, _) in batch]
                     self._inner.flush()
                     served = [self._inner.result(t) for t in tickets]
+                    # the outer ticket is the unit of tracing: its span
+                    # chain absorbs the inner stamps below, so drop the
+                    # inner ring's duplicate trace records
+                    self._inner.take_trace()
             except ServingError as e:
                 self._contain(e)  # typed: surface through the tickets
             except Exception as e:  # defensive: the thread must survive
@@ -290,19 +316,36 @@ class ConcurrentFrontend:
             with self._cv:
                 for i, (ticket, tenant, _, t_sub) in enumerate(batch):
                     if served is not None:
-                        self._results[ticket] = dataclasses.replace(
-                            served[i], tenant=tenant)
-                        self._per_tenant[tenant]["served"] += 1
                         status = STATUS_OK
+                        chain = self._chain(t_sub, done,
+                                            served[i].stages)
+                        self._results[ticket] = dataclasses.replace(
+                            served[i], tenant=tenant, stages=chain)
+                        self._per_tenant[tenant]["served"] += 1
                     else:
-                        self._results[ticket] = self._sentinel(
-                            tenant, STATUS_ERROR)
-                        self._per_tenant[tenant]["errors"] += 1
                         status = STATUS_ERROR
-                    self._trace.append(
-                        TicketTrace(ticket, tenant, t_sub, done, status))
+                        chain = self._chain(t_sub, done, ())
+                        self._results[ticket] = self._sentinel(
+                            tenant, STATUS_ERROR, chain)
+                        self._per_tenant[tenant]["errors"] += 1
+                    self._record_trace(TicketTrace(
+                        ticket, tenant, t_sub, done, status, chain))
+                    if self.trace:
+                        self.registry.observe("serving.e2e_latency_s",
+                                              done - t_sub)
                 self._n_inflight -= len(batch)
                 self._cv.notify_all()
+
+    def _chain(self, t_sub: float, done: float, inner: tuple) -> tuple:
+        """The outer ticket's span chain: outer submit/admit stamps, the
+        inner ring's bucket/dispatch/scan/rank stamps (queue wait is the
+        admit -> bucket gap), and the outer resolve. Error tickets carry
+        the degenerate submit -> admit -> resolve chain."""
+        if not self.trace:
+            return ()
+        mid = tuple((s, t) for s, t in inner if s in _INNER_STAGES)
+        return (("submit", t_sub), ("admit", t_sub), *mid,
+                ("resolve", done))
 
     def _contain(self, exc: Exception) -> None:
         """Reset the inner server after a drain failure (tickets resolve
@@ -312,6 +355,9 @@ class ConcurrentFrontend:
             self._inner._pending = []
             self._inner._ring.clear()
             self._inner._results.clear()
+            spans = getattr(self._inner, "_spans", None)
+            if spans is not None:  # tests inject span-less fake inners
+                spans.clear()
 
     # ------------------------------------------------------------------
     # engine swaps / stats / trace
@@ -332,36 +378,44 @@ class ConcurrentFrontend:
             self._inner.swap_engine(engine)
 
     def take_trace(self) -> list[TicketTrace]:
-        """Return and clear the completed-ticket trace (load harness)."""
+        """Return and clear the completed-ticket trace (load harness /
+        `tools/obs_report.py`); one record per submitted ticket, each
+        carrying its span chain when the server traces."""
         with self._cv:
             out, self._trace = self._trace, []
             return out
 
-    def stats(self) -> dict:
-        """The unified `Server` stats schema + tenant/queue accounting."""
+    def _collect(self, reg: MetricsRegistry) -> None:
+        """Snapshot-time collector for the multi-tenant accounting; runs
+        after the inner ring's collector on the shared registry, so the
+        outer view of submitted/shed/errors/pending/per_tenant wins.
+        `Condition` wraps an RLock, so taking `_cv` here is safe even
+        when `snapshot()` is called under it."""
         with self._cv:
-            inner = self._inner.stats()
             per_tenant = {t: dict(v) for t, v in self._per_tenant.items()}
-            out = {
-                "mode": self.mode,
-                "closed": self._closed,
-                "n_submitted": self._next_ticket,
-                "n_served": inner["n_served"],
-                "n_shed": sum(v["shed"] for v in per_tenant.values()),
-                "n_errors": sum(v["errors"] for v in per_tenant.values()),
-                "n_pending": self._n_queued() + self._n_inflight,
-                "n_padded": inner["n_padded"],
-                "n_batches": inner["n_batches"],
-                "padding_fraction": inner["padding_fraction"],
-                "cache_hits": inner["cache_hits"],
-                "cache_lookups": inner["cache_lookups"],
-                "cache_hit_rate": inner["cache_hit_rate"],
-                "per_tenant": per_tenant,
-                "queue_depth": self.queue_depth,
-                "queued_now": {t: len(q) for t, q in self._queues.items()},
-                "depth": inner["depth"],
-                "coalesce": inner["coalesce"],
-                "drain_chunk": self.drain_chunk,
-                "last_error": self._last_error,
-            }
-            return out
+            reg.info("serving.mode", self.mode)
+            reg.info("serving.closed", self._closed)
+            reg.gauge("serving.submitted", self._next_ticket)
+            reg.gauge("serving.shed",
+                      sum(v["shed"] for v in per_tenant.values()))
+            reg.gauge("serving.errors",
+                      sum(v["errors"] for v in per_tenant.values()))
+            reg.gauge("serving.pending",
+                      self._n_queued() + self._n_inflight)
+            reg.gauge("serving.trace_dropped", self.n_trace_dropped)
+            reg.gauge("serving.drain_chunk", self.drain_chunk)
+            reg.info("serving.per_tenant", per_tenant)
+            reg.info("serving.queue_depth", self.queue_depth)
+            reg.info("serving.queued_now",
+                     {t: len(q) for t, q in self._queues.items()})
+            reg.info("serving.last_error", self._last_error)
+
+    def snapshot(self) -> dict:
+        """The full telemetry snapshot: shared registry, so inner-ring
+        counters/histograms and multi-tenant accounting in one dict."""
+        return self.registry.snapshot()
+
+    def stats(self) -> dict:
+        """The unified `Server` stats schema + tenant/queue accounting —
+        a compatibility view over `snapshot()` (`server.stats_view`)."""
+        return stats_view(self.snapshot())

@@ -52,6 +52,13 @@ class CacheStats(NamedTuple):
         lk = int(self.lookups)
         return float(self.hits) / lk if lk else 0.0
 
+    def as_dict(self) -> dict:
+        """Plain-int view ``{hits, lookups, hit_rate}`` for registries and
+        reports (forces the one host sync on the traced scalars)."""
+        hits, lk = int(self.hits), int(self.lookups)
+        return {"hits": hits, "lookups": lk,
+                "hit_rate": hits / lk if lk else 0.0}
+
 
 @pytree_dataclass(meta_fields=("capacity",))
 class HotRowCache:

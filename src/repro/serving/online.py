@@ -88,6 +88,33 @@ class OnlineTrainer:
         self.staleness_ms: list[float] = []  # one entry per folded step
         self._pending_t: list[float] = []  # t_step of not-yet-folded steps
         self.last_loss = float("nan")
+        # telemetry: share the catalog's registry (adopted from the
+        # attached server) so fold staleness rides the one snapshot();
+        # resolved lazily because attach order varies
+        self._registry = None
+        self._probe_registry()
+
+    @property
+    def registry(self):
+        return self._probe_registry()
+
+    def _probe_registry(self):
+        """The catalog's registry, once it has one; registers the
+        `online.*` collector the first time it appears."""
+        if self._registry is None:
+            reg = getattr(self.catalog, "registry", None)
+            if reg is not None:
+                self._registry = reg
+                reg.register_collector(self._collect)
+        return self._registry
+
+    def _collect(self, reg) -> None:
+        """Snapshot-time collector: `online.*` freshness gauges."""
+        reg.gauge("online.steps", self.steps_done)
+        reg.gauge("online.folds", self.n_folds)
+        reg.gauge("online.rows_folded", self.rows_folded)
+        reg.gauge("online.updates_visible", self.updates_visible)
+        reg.gauge("online.updates_pending", self.updates_pending)
 
     # -- introspection -------------------------------------------------
     @property
@@ -141,6 +168,12 @@ class OnlineTrainer:
             self.rows_folded += int(changed.size)
         now = time.perf_counter()
         self.staleness_ms.extend((now - t) * 1e3 for t in self._pending_t)
+        if self.registry is not None:
+            for t in self._pending_t:
+                self.registry.observe("online.staleness_ms",
+                                      (now - t) * 1e3)
+            self.registry.event("fold", rows=int(changed.size),
+                                steps_folded=len(self._pending_t))
         self.updates_visible += len(self._pending_t)
         self._pending_t.clear()
         self.n_folds += 1

@@ -503,6 +503,14 @@ scan_step = jax.jit(_scan_stage)
 rank_stage_step = jax.jit(_rank_stage, donate_argnums=(5,))
 
 
+def n_summary_blocks(engine: RecSysEngine) -> int:
+    """Total block-summary blocks of the engine's catalog (0 when no
+    summary is attached — dense plans can't prune). The denominator for
+    the ``scan_frac`` telemetry: blocks touched / summary blocks."""
+    summary = engine.block_summary
+    return 0 if summary is None else int(summary.n_blocks)
+
+
 def hit_rate(engine: RecSysEngine, data, batch_size: int = 256,
              k: int = 10, mode: str = "lsh", max_users: int | None = None
              ) -> float:

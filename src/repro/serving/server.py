@@ -98,7 +98,17 @@ class Server(Protocol):
         ...
 
     def stats(self) -> dict:
-        """One stats schema for every mode (see docs/SERVING.md)."""
+        """One stats schema for every mode (see docs/SERVING.md) — the
+        `stats_view` of `snapshot()`."""
+        ...
+
+    def snapshot(self) -> dict:
+        """The full telemetry snapshot (docs/OBSERVABILITY.md)."""
+        ...
+
+    def take_trace(self) -> list:
+        """Return-and-clear the completed-ticket `TicketTrace` records
+        (each carries its stage-span chain when tracing is on)."""
         ...
 
     def swap_engine(self, engine) -> None:
@@ -107,6 +117,49 @@ class Server(Protocol):
 
 
 _MODES = ("sync", "pipelined", "concurrent")
+
+
+def stats_view(snapshot: dict) -> dict:
+    """The legacy `stats()` dict as a view over a telemetry `snapshot()`.
+
+    Every front-end's `stats()` is this one function applied to its
+    `MetricsRegistry.snapshot()` — the single place the unified key
+    schema is defined, so the three modes can never drift apart again.
+    All modes return the SAME key set; knobs that don't apply to a mode
+    take their degenerate values (``depth=1`` / ``in_flight=0`` for the
+    synchronous batcher, ``queue_depth=None`` / ``drain_chunk=None`` for
+    the single-tenant front-ends). Derived ratios (`padding_fraction`,
+    `cache_hit_rate`) are computed here, not stored.
+    """
+    served = int(snapshot.get("serving.served", 0))
+    padded = int(snapshot.get("serving.padded", 0))
+    hits = int(snapshot.get("cache.hits", 0))
+    lookups = int(snapshot.get("cache.lookups", 0))
+    total = served + padded
+    drain = snapshot.get("serving.drain_chunk")
+    return {
+        "mode": snapshot.get("serving.mode"),
+        "closed": bool(snapshot.get("serving.closed", False)),
+        "n_submitted": int(snapshot.get("serving.submitted", 0)),
+        "n_served": served,
+        "n_shed": int(snapshot.get("serving.shed", 0)),
+        "n_errors": int(snapshot.get("serving.errors", 0)),
+        "n_pending": int(snapshot.get("serving.pending", 0)),
+        "n_padded": padded,
+        "n_batches": int(snapshot.get("serving.batches", 0)),
+        "padding_fraction": padded / total if total else 0.0,
+        "cache_hits": hits,
+        "cache_lookups": lookups,
+        "cache_hit_rate": hits / lookups if lookups else 0.0,
+        "per_tenant": snapshot.get("serving.per_tenant", {}),
+        "depth": int(snapshot.get("serving.ring_depth", 1)),
+        "coalesce": int(snapshot.get("serving.coalesce", 1)),
+        "in_flight": int(snapshot.get("serving.in_flight", 0)),
+        "queue_depth": snapshot.get("serving.queue_depth"),
+        "queued_now": snapshot.get("serving.queued_now", {}),
+        "drain_chunk": None if drain is None else int(drain),
+        "last_error": snapshot.get("serving.last_error"),
+    }
 
 
 def make_server(engine, mode: str = "sync", **knobs) -> "Server":
@@ -120,7 +173,9 @@ def make_server(engine, mode: str = "sync", **knobs) -> "Server":
         draining through a thread into the pipelined ring, with admission
         control and load shedding).
       **knobs: mode-scoped keyword knobs —
-        every mode: ``max_batch``, ``buckets``;
+        every mode: ``max_batch``, ``buckets``, ``trace`` (stage-span
+        tracing, default True), ``registry`` (a shared
+        `repro.obs.MetricsRegistry`; default: one per server);
         pipelined + concurrent: ``depth``, ``coalesce``;
         concurrent only: ``tenants``, ``queue_depth``, ``drain_chunk``,
         ``shed``, ``autostart``.
@@ -136,12 +191,13 @@ def make_server(engine, mode: str = "sync", **knobs) -> "Server":
 
     classes = {"sync": MicroBatcher, "pipelined": AsyncServer,
                "concurrent": ConcurrentFrontend}
+    every = {"max_batch", "buckets", "trace", "registry"}
     allowed = {
-        "sync": {"max_batch", "buckets"},
-        "pipelined": {"max_batch", "buckets", "depth", "coalesce"},
-        "concurrent": {"max_batch", "buckets", "depth", "coalesce",
-                       "tenants", "queue_depth", "drain_chunk", "shed",
-                       "autostart"},
+        "sync": every,
+        "pipelined": every | {"depth", "coalesce"},
+        "concurrent": every | {"depth", "coalesce", "tenants",
+                               "queue_depth", "drain_chunk", "shed",
+                               "autostart"},
     }
     if mode not in _MODES:
         raise ServerConfigError(

@@ -44,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -348,7 +349,8 @@ class TieredCatalog:
 
     def __init__(self, directory: str, shard: BaseShard, inner, *,
                  alive, summary, pool_rows: int, item_freqs=None,
-                 delta_capacity: int = 1024, auto_compact: bool = True):
+                 delta_capacity: int = 1024, auto_compact: bool = True,
+                 registry=None):
         if inner.nns_mesh is not None:
             raise ValueError("TieredCatalog serving is host-driven; "
                              "use an unsharded engine")
@@ -392,12 +394,30 @@ class TieredCatalog:
         self.pool_hits = 0
         self.delta_hits = 0
         self.disk_rows = 0
+        self.last_compact_s = 0.0
+        # optional metrics sink (repro.obs.MetricsRegistry): tier
+        # residency + hit mix ride whoever's snapshot() as tiered.* keys
+        self.registry = registry
+        if registry is not None:
+            registry.register_collector(self._collect)
+
+    def _collect(self, reg) -> None:
+        """Snapshot-time collector: tier residency + hit-mix gauges."""
+        reg.gauge("tiered.epoch", self.epoch)
+        reg.gauge("tiered.compactions", self.n_compactions)
+        reg.gauge("tiered.last_compact_s", self.last_compact_s)
+        reg.gauge("tiered.pool_hits", self.pool_hits)
+        reg.gauge("tiered.delta_hits", self.delta_hits)
+        reg.gauge("tiered.disk_rows", self.disk_rows)
+        reg.gauge("tiered.pool_rows", int(self.pool_ids.size))
+        reg.gauge("tiered.delta_pending", self.n_pending)
+        reg.gauge("tiered.resident_bytes", self.resident_bytes())
 
     # -- construction --------------------------------------------------
     @classmethod
     def open(cls, directory: str, engine, *, pool_rows: int = 0,
              item_freqs=None, delta_capacity: int = 1024,
-             auto_compact: bool = True) -> "TieredCatalog":
+             auto_compact: bool = True, registry=None) -> "TieredCatalog":
         """Open the latest shard epoch under `directory` and serve it.
 
         `engine` supplies the user-side model state (params, UIETs, knobs,
@@ -432,14 +452,16 @@ class TieredCatalog:
             item_mask=None, delta=None, block_summary=None)
         cat = cls(directory, shard, inner, alive=alive, summary=summary,
                   pool_rows=pool_rows, item_freqs=item_freqs,
-                  delta_capacity=delta_capacity, auto_compact=auto_compact)
+                  delta_capacity=delta_capacity, auto_compact=auto_compact,
+                  registry=registry)
         cat.epoch = int(epochs[-1].split("_")[1])
         return cat
 
     @classmethod
     def from_engine(cls, engine, directory: str, *, pool_rows: int = 0,
                     item_freqs=None, delta_capacity: int = 1024,
-                    auto_compact: bool = True) -> "TieredCatalog":
+                    auto_compact: bool = True, registry=None
+                    ) -> "TieredCatalog":
         """Spill an all-RAM engine's item table to an epoch-0 shard and
         serve it tiered (the small-catalog / test construction path)."""
         sigs = np.asarray(engine.item_sigs)
@@ -455,7 +477,7 @@ class TieredCatalog:
             alive=alive, summary=summary)
         return cls.open(directory, engine, pool_rows=pool_rows,
                         item_freqs=item_freqs, delta_capacity=delta_capacity,
-                        auto_compact=auto_compact)
+                        auto_compact=auto_compact, registry=registry)
 
     # -- tier mechanics ------------------------------------------------
     def _resolve_bytes(self, ids: np.ndarray, *, use_delta: bool = True):
@@ -699,6 +721,7 @@ class TieredCatalog:
         /demotes pool + hot membership from the measured frequencies —
         tier migration riding the epoch fold.
         """
+        t0 = time.perf_counter()
         n_base, d, words = self.base.n, self.base.d, self.base.words
         dids_np = np.asarray(self.delta.ids)
         live = np.nonzero(dids_np != EMPTY_ID)[0]
@@ -765,6 +788,14 @@ class TieredCatalog:
         freqs[:m] = self.item_freqs[:m]
         self.item_freqs = freqs
         self.rebalance()
+        self.last_compact_s = time.perf_counter() - t0
+        if self.registry is not None:
+            self.registry.observe("tiered.compact_pause_s",
+                                  self.last_compact_s)
+            self.registry.event("compact", epoch=self.epoch,
+                                pause_s=self.last_compact_s,
+                                n_items=self.n_items,
+                                pool_rows=int(self.pool_ids.size))
 
     # -- persistence ---------------------------------------------------
     def _sidecar_state(self) -> dict:

@@ -12,8 +12,11 @@ REPO = Path(__file__).resolve().parent.parent
 
 def _public_api():
     """(name, object) pairs whose docstrings the docs sweep guarantees."""
+    from repro import obs
     from repro.core import nns
     from repro.kernels import ops
+    from repro.obs import registry as obs_registry
+    from repro.obs import tracing as obs_tracing
     from repro.serving import (
         AsyncServer,
         ConcurrentFrontend,
@@ -38,10 +41,31 @@ def _public_api():
         scan_step,
         serve_step,
         server,
+        stats_view,
         summarize_trace,
     )
 
     return [
+        # observability layer
+        ("obs", obs),
+        ("obs.registry", obs_registry),
+        ("obs.tracing", obs_tracing),
+        ("MetricsRegistry", obs.MetricsRegistry),
+        ("MetricsRegistry.count", obs.MetricsRegistry.count),
+        ("MetricsRegistry.observe", obs.MetricsRegistry.observe),
+        ("MetricsRegistry.gauge", obs.MetricsRegistry.gauge),
+        ("MetricsRegistry.event", obs.MetricsRegistry.event),
+        ("MetricsRegistry.register_collector",
+         obs.MetricsRegistry.register_collector),
+        ("MetricsRegistry.snapshot", obs.MetricsRegistry.snapshot),
+        ("MetricsRegistry.to_prometheus", obs.MetricsRegistry.to_prometheus),
+        ("TicketTrace", obs.TicketTrace),
+        ("stage_durations", obs.stage_durations),
+        ("well_ordered", obs.well_ordered),
+        ("dump_trace", obs.dump_trace),
+        ("stats_view", stats_view),
+        ("MicroBatcher.snapshot", MicroBatcher.snapshot),
+        ("MicroBatcher.take_trace", MicroBatcher.take_trace),
         # modules
         ("serving.batcher", batcher),
         ("serving.async_server", async_server),
@@ -173,3 +197,21 @@ def test_docs_checker_catches_dangling_refs(tmp_path):
     assert proc.returncode == 1
     assert "does_not_exist" in proc.stdout
     assert "nope_missing" in proc.stdout
+
+
+def test_docs_checker_catches_absolute_paths(tmp_path):
+    """Machine-local absolute paths are flagged even when they exist on the
+    machine running the checker — they reference an author's box, not the
+    repo."""
+    bad = tmp_path / "ABS.md"
+    bad.write_text("data lives in /tmp/scratch/data and the checkout at "
+                   "/home/someone/repo; a URL http://x/usr/share is fine\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), str(bad)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 1
+    assert "/tmp/scratch/data" in proc.stdout
+    assert "/home/someone/repo" in proc.stdout
+    assert "absolute path" in proc.stdout
+    # URLs whose path component merely contains /usr/... are not flagged
+    assert "/usr/share" not in proc.stdout

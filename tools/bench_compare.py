@@ -18,7 +18,9 @@ a pruned scan touching more of the catalog is a perf regression even
 when raw qps holds), ``resident_bytes=`` (tiered-catalog RAM residency,
 lower is better), ``hr_at_10=`` (retrieval quality, higher is better),
 ``staleness_ms=`` (online-learning update-visibility latency, lower is
-better), plus the ``us_per_call`` column. Rows carry an
+better), ``overhead_frac=`` (telemetry overhead: the fraction of qps
+instrumented serving gives up — lower is better), plus the
+``us_per_call`` column. Rows carry an
 ``ok=False`` style self-check in ``derived`` sometimes; those are the
 benchmark's own gates and are not re-judged here. Rows present on only
 one side are listed but never fail the diff (benchmarks grow cells over
@@ -58,6 +60,11 @@ _METRICS = (
     # update-landed -> update-visible latency (a rise is the regression)
     ("hr_at_10", re.compile(r"(?:^|;)hr_at_10=([0-9.eE+-]+)"), False),
     ("staleness_ms", re.compile(r"(?:^|;)staleness_ms=([0-9.eE+-]+)"),
+     True),
+    # telemetry overhead: fractional qps lost to instrumented serving
+    # (benchmarks/obs_overhead.py) — growing it is a serving regression
+    # even when the uninstrumented baseline holds
+    ("overhead_frac", re.compile(r"(?:^|;)overhead_frac=([0-9.eE+-]+)"),
      True),
 )
 

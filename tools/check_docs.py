@@ -10,6 +10,10 @@ Scans the markdown docs (docs/*.md + ROADMAP.md) for
     ``kernels/``, ``serving/``, resolved under ``src/repro``) — which must
     name an existing file or directory. ``path.py:symbol`` /
     ``path.py:123`` suffixes are allowed and stripped.
+  * absolute filesystem paths (``/root/...``, ``/home/...``, ``/tmp/...``,
+    ``/opt/...``, ``/usr/...``, ``/var/...``) — always flagged: they
+    reference one author's machine, not the repo, so they rot the moment
+    anyone else (or CI) reads the doc.
 
 Exits non-zero listing every dangling reference. Run from the repo root:
 
@@ -36,6 +40,10 @@ _PKG_PREFIXES = ("core/", "kernels/", "serving/", "models/", "configs/",
 
 _MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _PATH_TOKEN = re.compile(r"[A-Za-z0-9_./-]+")
+# machine-local absolute paths: never valid in a doc, whether or not the
+# path happens to exist on the machine running the checker
+_ABS_PATH = re.compile(r"(?<![\w./-])/(?:root|home|tmp|opt|usr|var)/"
+                       r"[A-Za-z0-9_./-]+")
 
 
 def _exists(rel: str) -> bool:
@@ -73,6 +81,9 @@ def check_file(path: Path) -> list[str]:
             if not _exists(f"src/repro/{token}"):
                 problems.append(
                     f"{label}: missing src/repro path ({token})")
+    for m in _ABS_PATH.finditer(text):
+        problems.append(f"{label}: absolute path outside the repo "
+                        f"({m.group(0)})")
     return problems
 
 

@@ -1,0 +1,186 @@
+"""Render a per-stage latency breakdown from a serving trace.
+
+The serving front-ends stamp every ticket with a stage-span chain
+(submit -> admit -> bucket -> dispatch -> scan -> rank -> resolve; see
+src/repro/obs/tracing.py and docs/OBSERVABILITY.md). `take_trace()` hands
+the records back in-process; `repro.obs.dump_trace` writes them as JSONL.
+This tool turns either form into the table iMARS-style evaluations lead
+with — where each microsecond of a request actually went:
+
+    python tools/obs_report.py TRACE.jsonl [--tenant N] [--status ok]
+
+Stdlib-only (the check_docs/bench_compare idiom), so CI and laptops can
+render a trace without a jax install. Import surface for harnesses:
+`load_trace` (JSONL -> records), `stage_breakdown` (records -> per-stage
+stats), `render_breakdown` (stats -> table text). `stage_breakdown`
+accepts both the JSONL dict shape and live `TicketTrace` records, so
+``examples/serve_recsys.py --report`` feeds `take_trace()` output
+straight in.
+
+Each chain is contiguous (stage i starts where stage i-1 ended), so the
+per-stage means sum to the mean ticket latency exactly; the breakdown
+also reports that sum against the measured submit->done latency — the
+consistency `benchmarks/obs_overhead.py` gates at 10%.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# canonical stage order (src/repro/obs/tracing.py STAGES, sans submit:
+# the submit boundary opens the chain and is never charged time)
+_STAGE_ORDER = ("admit", "bucket", "dispatch", "scan", "rank", "resolve")
+
+
+def load_trace(path) -> list[dict]:
+    """Read a `dump_trace` JSONL file: one trace record dict per line."""
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: not JSON: {e}") from e
+    return records
+
+
+def _as_dict(rec) -> dict:
+    """One record as the JSONL dict shape (accepts live TicketTrace)."""
+    if isinstance(rec, dict):
+        return rec
+    return {"ticket": rec.ticket, "tenant": rec.tenant,
+            "submit_s": rec.submit_s, "done_s": rec.done_s,
+            "status": rec.status, "stages": list(rec.stages)}
+
+
+def _quantile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank quantile of an ascending list (0.0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def stage_breakdown(records, *, tenant=None, status=None) -> dict:
+    """Per-stage latency stats over `records` (dicts or TicketTrace).
+
+    Returns::
+
+        {"n": tickets counted, "by_status": {status: count},
+         "latency_s": {"mean", "p50", "p99", "max"},
+         "stage_sum_mean_s": mean of per-ticket stage sums,
+         "stages": {stage: {"n", "mean_s", "p50_s", "p99_s", "max_s",
+                            "frac"}}}
+
+    ``frac`` is the stage's share of total traced time. Tickets with an
+    empty chain (``trace=False`` servers) count toward ``n``/``by_status``
+    but contribute no stage rows. `tenant` / `status` filter the records
+    before aggregation.
+    """
+    by_status: dict = {}
+    latencies: list[float] = []
+    sums: list[float] = []
+    per_stage: dict = {}
+    n = 0
+    for rec in records:
+        rec = _as_dict(rec)
+        if tenant is not None and rec.get("tenant") != tenant:
+            continue
+        if status is not None and rec.get("status") != status:
+            continue
+        n += 1
+        by_status[rec["status"]] = by_status.get(rec["status"], 0) + 1
+        latencies.append(float(rec["done_s"]) - float(rec["submit_s"]))
+        stages = rec.get("stages") or []
+        if len(stages) < 2:
+            continue
+        total = 0.0
+        for (_, t0), (name, t1) in zip(stages, stages[1:]):
+            d = float(t1) - float(t0)
+            per_stage.setdefault(name, []).append(d)
+            total += d
+        sums.append(total)
+    latencies.sort()
+    grand = sum(sum(v) for v in per_stage.values())
+    stages_out = {}
+    for name in _STAGE_ORDER:
+        vals = sorted(per_stage.get(name, []))
+        if not vals:
+            continue
+        stages_out[name] = {
+            "n": len(vals),
+            "mean_s": sum(vals) / len(vals),
+            "p50_s": _quantile(vals, 0.50),
+            "p99_s": _quantile(vals, 0.99),
+            "max_s": vals[-1],
+            "frac": (sum(vals) / grand) if grand else 0.0,
+        }
+    return {
+        "n": n,
+        "by_status": by_status,
+        "latency_s": {
+            "mean": sum(latencies) / len(latencies) if latencies else 0.0,
+            "p50": _quantile(latencies, 0.50),
+            "p99": _quantile(latencies, 0.99),
+            "max": latencies[-1] if latencies else 0.0,
+        },
+        "stage_sum_mean_s": sum(sums) / len(sums) if sums else 0.0,
+        "stages": stages_out,
+    }
+
+
+def render_breakdown(bd: dict) -> str:
+    """The breakdown as a fixed-width table (submit -> resolve order)."""
+    us = 1e6
+    lines = []
+    statuses = ", ".join(f"{k}={v}" for k, v in sorted(bd["by_status"]
+                                                       .items()))
+    lines.append(f"tickets: {bd['n']} ({statuses or 'none'})")
+    lat = bd["latency_s"]
+    lines.append(f"latency: mean {lat['mean'] * us:10.1f} us   "
+                 f"p50 {lat['p50'] * us:10.1f} us   "
+                 f"p99 {lat['p99'] * us:10.1f} us   "
+                 f"max {lat['max'] * us:10.1f} us")
+    lines.append(f"{'stage':>10}  {'n':>8}  {'mean_us':>12}  "
+                 f"{'p50_us':>12}  {'p99_us':>12}  {'frac':>6}")
+    for name in _STAGE_ORDER:
+        st = bd["stages"].get(name)
+        if st is None:
+            continue
+        lines.append(f"{name:>10}  {st['n']:>8}  "
+                     f"{st['mean_s'] * us:>12.1f}  "
+                     f"{st['p50_s'] * us:>12.1f}  "
+                     f"{st['p99_s'] * us:>12.1f}  {st['frac']:>6.1%}")
+    if bd["stages"]:
+        lines.append(f"stage-sum mean {bd['stage_sum_mean_s'] * us:.1f} us "
+                     f"vs latency mean {lat['mean'] * us:.1f} us")
+    return "\n".join(lines)
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(
+        description="per-stage latency breakdown of a serving trace "
+                    "(dump_trace JSONL)")
+    ap.add_argument("trace", type=Path, help="trace JSONL file")
+    ap.add_argument("--tenant", type=int, default=None,
+                    help="only this tenant's tickets")
+    ap.add_argument("--status", default=None,
+                    choices=("ok", "shed", "error"),
+                    help="only tickets with this status")
+    args = ap.parse_args(argv)
+    records = load_trace(args.trace)
+    bd = stage_breakdown(records, tenant=args.tenant, status=args.status)
+    print(render_breakdown(bd))
+    return 0 if bd["n"] else 1
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main(sys.argv[1:]))
+    except BrokenPipeError:  # e.g. piped into `head`
+        sys.exit(0)
